@@ -1,0 +1,108 @@
+"""Shared harness for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import functools
+import json
+import os
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    PiscoConfig,
+    dense_mixing,
+    make_topology,
+    replicate_params,
+    run_training,
+)
+from repro.data import FederatedDataset, RoundSampler
+from repro.models import simple as S
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def save_result(name: str, payload: dict) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def make_logreg_workload(n_agents: int = 10, quick: bool = False, seed: int = 0):
+    """§5.1 workload: synthetic-a9a, sorted split, logreg + nonconvex reg."""
+    from repro.data.synthetic import synthetic_a9a
+
+    n_samples = 4000 if quick else 32560
+    x, y = synthetic_a9a(n_samples, seed=seed)
+    data = FederatedDataset.from_arrays(x, y, n_agents, heterogeneous=True, seed=seed)
+    loss_fn = functools.partial(S.logreg_loss, rho=0.01)
+
+    xt = jnp.asarray(np.concatenate(data.x_train, axis=0))
+    yt = jnp.asarray(np.concatenate(data.y_train, axis=0))
+    xe = jnp.asarray(data.x_test)
+    ye = jnp.asarray(data.y_test)
+
+    @jax.jit
+    def eval_metrics(params):
+        g = jax.grad(lambda p: S.logreg_loss(p, (xt, yt), 0.01))(params)
+        gsq = sum(jnp.sum(v**2) for v in jax.tree.leaves(g))
+        return gsq, S.logreg_accuracy(params, xe, ye)
+
+    def eval_fn(params):
+        gsq, acc = eval_metrics(params)
+        return {"grad_sq": float(gsq), "test_acc": float(acc)}
+
+    d = x.shape[1]
+    return data, loss_fn, eval_fn, {"w": jnp.zeros((d,), jnp.float32)}
+
+
+def run_pisco_variant(
+    *,
+    data: FederatedDataset,
+    loss_fn,
+    eval_fn,
+    params0,
+    topology_name: str = "ring",
+    p: float = 0.1,
+    t_o: int = 1,
+    eta_l: float = 0.5,
+    eta_c: float = 1.0,
+    rounds: int = 400,
+    batch: int = 256,
+    seed: int = 0,
+    algo: str = "pisco",
+    eval_every: int = 1,
+    topo_kwargs: Optional[dict] = None,
+):
+    n = data.n_agents
+    cfg = PiscoConfig(n_agents=n, t_o=t_o, eta_l=eta_l, eta_c=eta_c, p=p, seed=seed)
+    topo = make_topology(topology_name, n, **(topo_kwargs or {}))
+    mixing = dense_mixing(topo)
+    sampler = RoundSampler(data, batch_size=min(batch, data.samples_per_agent), t_o=t_o, seed=seed)
+    x0 = replicate_params(params0, n)
+    hist = run_training(
+        algo, loss_fn, x0, cfg, mixing, sampler,
+        rounds=rounds, eval_fn=eval_fn, eval_every=eval_every,
+    )
+    return hist, topo
+
+
+def comm_rounds_to_targets(hist, grad_target=0.05, acc_target=0.80):
+    """Paper Fig. 4 readout: (a2a, a2s) rounds when each target is first met."""
+    out = {}
+    for name, key, target, mode in (
+        ("train", "grad_sq", grad_target, "running_le"),
+        ("test", "test_acc", acc_target, "ge"),
+    ):
+        r = hist.rounds_to_threshold(key, target, mode=mode)
+        if r is None:
+            out[name] = None
+        else:
+            # eval_every=1 => round index == eval index
+            a2a = sum(1 for g in hist.is_global[: r + 1] if not g)
+            a2s = sum(1 for g in hist.is_global[: r + 1] if g)
+            out[name] = {"rounds": r + 1, "a2a": a2a, "a2s": a2s}
+    return out

@@ -1,0 +1,98 @@
+"""Roofline aggregation: read artifacts/dryrun/*.json and emit the
+per-(arch x shape x mesh x step) table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+
+def load_records(art_dir: str = "artifacts/dryrun") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_table(recs: List[dict], mesh: Optional[str] = "single") -> str:
+    rows = []
+    header = (
+        "| arch | shape | step | FLOPs/dev | HBM B/dev | coll B/dev | "
+        "compute s | memory s | coll s | dominant | useful |"
+    )
+    sep = "|" + "---|" * 11
+    rows.append(header)
+    rows.append(sep)
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        if r["step"] == "train_global":
+            continue  # table shows the gossip (technique) round; global in §Dry-run
+        ro = r["roofline"]
+        useful = f"{ro['useful_ratio']:.2f}" if ro.get("useful_ratio") else "-"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {ro['flops_per_device']:.2e} | {ro['hbm_bytes_per_device']:.2e} "
+            f"| {ro['collective_bytes_per_device']:.2e} "
+            f"| {ro['compute_s']:.2e} | {ro['memory_s']:.2e} | {ro['collective_s']:.2e} "
+            f"| **{ro['dominant']}** | {useful} |"
+        )
+    return "\n".join(rows)
+
+
+def summarize(recs: List[dict]) -> Dict:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    fails = [r for r in recs if r.get("status") != "ok"]
+    doms: Dict[str, int] = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    worst = sorted(
+        (r for r in ok if r["mesh"] == "single" and r["roofline"].get("useful_ratio")),
+        key=lambda r: r["roofline"]["useful_ratio"],
+    )
+    most_coll = sorted(
+        (r for r in ok if r["mesh"] == "single"),
+        key=lambda r: -r["roofline"]["collective_s"],
+    )
+    return {
+        "n_ok": len(ok),
+        "n_fail": len(fails),
+        "dominant_counts": doms,
+        "worst_useful": [
+            (r["arch"], r["shape"], r["step"], r["roofline"]["useful_ratio"])
+            for r in worst[:5]
+        ],
+        "most_collective_bound": [
+            (r["arch"], r["shape"], r["step"], r["roofline"]["collective_s"])
+            for r in most_coll[:5]
+        ],
+        "failures": [
+            (r["arch"], r["shape"], r["mesh"], r.get("error", "?")) for r in fails
+        ],
+    }
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print(fmt_table(recs, args.mesh))
+    print()
+    s = summarize(recs)
+    print(f"ok={s['n_ok']} fail={s['n_fail']} dominant={s['dominant_counts']}")
+    print("worst useful_ratio:", s["worst_useful"])
+    print("most collective-bound:", s["most_collective_bound"])
+    for f in s["failures"]:
+        print("FAIL:", f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default (quick) mode runs reduced sizes suitable for the CPU container; each
+row prints `name,seconds,derived` CSV.  --full reproduces the paper-scale
+settings (slower).  Individual figures: `python -m benchmarks.fig4_p_sweep`.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _row(name: str, seconds: float, derived: str) -> None:
+    print(f"{name},{seconds:.2f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale settings")
+    ap.add_argument(
+        "--only", nargs="*", default=None,
+        help="subset: fig4 fig5 fig6 fig7 table2 roofline",
+    )
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only) if args.only else None
+
+    print("name,seconds,derived")
+
+    if only is None or "fig4" in only:
+        from benchmarks import fig4_p_sweep
+
+        t0 = time.perf_counter()
+        payload = fig4_p_sweep.run(quick=quick)
+        res = payload["results"]
+        p0 = next((v for k, v in res.items() if k.startswith("p=0.0000")), None)
+        pm = min(
+            (v for k, v in res.items() if not k.startswith("p=0.0000") and v["train"]),
+            key=lambda v: v["train"]["rounds"],
+            default=None,
+        )
+        p1 = res.get("p=1.0000")
+        derived = "n/a"
+        if p0 and p0["train"] and pm:
+            saving = 1.0 - pm["train"]["a2a"] / max(1.0, p0["train"]["a2a"])
+            derived = f"a2a_savings_vs_p0={saving:.0%}"
+        elif pm and p1 and p1["train"]:
+            # p=0 never reached the target (the strongest form of the claim)
+            derived = (
+                f"p0_never_reached;best_semi_a2s={pm['train']['a2s']:.0f}"
+                f";p1_a2s={p1['train']['a2s']:.0f}"
+            )
+        _row("fig4_p_sweep", time.perf_counter() - t0, derived)
+
+    if only is None or "fig5" in only:
+        from benchmarks import fig5_local_updates
+
+        t0 = time.perf_counter()
+        payload = fig5_local_updates.run(quick=quick)
+        res = payload["results"]
+        r1 = res.get("T_o=1,p=0.1000", {}).get("train_rounds")
+        r10 = res.get("T_o=10,p=0.1000", {}).get("train_rounds")
+        derived = (
+            f"rounds_T1={r1:.0f};rounds_T10={r10:.0f}" if r1 and r10 else "n/a"
+        )
+        _row("fig5_local_updates", time.perf_counter() - t0, derived)
+
+    if only is None or "fig6" in only:
+        from benchmarks import fig6_topology
+
+        t0 = time.perf_counter()
+        payload = fig6_topology.run(quick=quick)
+        res = payload["results"]
+        dis0 = res.get("er_disconnected,p=0.0000", {}).get("final_train_loss")
+        dis1 = res.get("er_disconnected,p=0.1000", {}).get("final_train_loss")
+        derived = (
+            f"disc_loss_p0={dis0:.3f};p0.1={dis1:.3f}" if dis0 and dis1 else "n/a"
+        )
+        _row("fig6_topology", time.perf_counter() - t0, derived)
+
+    if only is None or "fig7" in only:
+        from benchmarks import fig7_cnn
+
+        t0 = time.perf_counter()
+        payload = fig7_cnn.run(quick=quick)
+        res = payload["results"]
+        accs = {k: v["final_test_acc"] for k, v in res.items()}
+        derived = ";".join(f"{k}={v:.2f}" for k, v in accs.items())
+        _row("fig7_cnn", time.perf_counter() - t0, derived)
+
+    if only is None or "table2" in only:
+        from benchmarks import table2_complexity
+
+        t0 = time.perf_counter()
+        payload = table2_complexity.run(quick=quick)
+        nd = payload["network_dependency"]
+        r = next(x for x in nd if x["lambda_w"] == 1e-4 and 0 < x["p"] < 1 and x["p"] > x["lambda_w"])
+        derived = f"lam1e-4_sqrtp_dependency={r['network_term']:.1e}"
+        _row("table2_complexity", time.perf_counter() - t0, derived)
+
+    if only is not None and "ablation" in only:
+        from benchmarks import ablation_eta_c
+
+        t0 = time.perf_counter()
+        payload = ablation_eta_c.run(quick=quick)
+        best = min(
+            (v["final_grad_sq"] for v in payload["results"].values()),
+        )
+        _row("ablation_eta_c", time.perf_counter() - t0, f"best_grad_sq={best:.2e}")
+
+    if only is None or "roofline" in only:
+        from benchmarks import roofline
+
+        t0 = time.perf_counter()
+        recs = roofline.load_records()
+        s = roofline.summarize(recs)
+        derived = f"ok={s['n_ok']};fail={s['n_fail']};dominant={s['dominant_counts']}"
+        _row("roofline", time.perf_counter() - t0, derived.replace(",", ";"))
+
+
+if __name__ == "__main__":
+    main()

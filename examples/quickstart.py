@@ -1,0 +1,61 @@
+"""Quickstart: PISCO in ~60 lines.
+
+Federated nonconvex logistic regression over a ring of 10 agents with a
+probabilistic server (p = 0.1), gradient tracking, and T_o = 5 local updates.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import functools
+
+import jax.numpy as jnp
+
+from repro.core import PiscoConfig, dense_mixing, make_topology, replicate_params, run_training
+from repro.data import FederatedDataset, RoundSampler
+from repro.data.synthetic import synthetic_a9a
+from repro.models.simple import logreg_accuracy, logreg_loss
+
+
+def main():
+    # 1. Federated data: sorted-label split (extreme heterogeneity, paper §5)
+    x, y = synthetic_a9a(8000, seed=0)
+    data = FederatedDataset.from_arrays(x, y, n_agents=10, heterogeneous=True)
+
+    # 2. Semi-decentralized network: ring gossip + server w.p. p
+    topo = make_topology("ring", 10)
+    mixing = dense_mixing(topo)
+    cfg = PiscoConfig(n_agents=10, t_o=5, eta_l=0.3, eta_c=1.0, p=0.1, seed=0)
+    print(f"ring lambda_w={topo.lambda_w:.3f}  expected lambda_p={topo.expected_rate(cfg.p):.3f}")
+
+    # 3. Train
+    loss_fn = functools.partial(logreg_loss, rho=0.01)
+    sampler = RoundSampler(data, batch_size=128, t_o=cfg.t_o)
+    x0 = replicate_params({"w": jnp.zeros(x.shape[1])}, cfg.n_agents)
+
+    x_all = jnp.asarray(data.x_train.reshape(-1, data.x_train.shape[-1]))
+    y_all = jnp.asarray(data.y_train.reshape(-1))
+
+    def eval_fn(params):
+        # metrics at the agent-average parameters x-bar (the paper's readout)
+        acc = logreg_accuracy(params, jnp.asarray(data.x_test), jnp.asarray(data.y_test))
+        gl = loss_fn(params, (x_all, y_all))
+        return {"test_acc": float(acc), "global_loss": float(gl)}
+
+    hist = run_training(
+        "pisco", loss_fn, x0, cfg, mixing, sampler,
+        rounds=100, eval_fn=eval_fn, eval_every=10,
+    )
+
+    # 4. Report
+    print(
+        f"global loss at x-bar: {hist.eval_metrics[0]['global_loss']:.4f} -> "
+        f"{hist.eval_metrics[-1]['global_loss']:.4f}"
+    )
+    print(f"test accuracy: {hist.eval_metrics[-1]['test_acc']:.3f}")
+    print(
+        f"communication: {hist.accountant.agent_to_agent} cheap gossip rounds, "
+        f"{hist.accountant.agent_to_server} server rounds"
+    )
+
+
+if __name__ == "__main__":
+    main()

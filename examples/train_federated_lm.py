@@ -1,0 +1,126 @@
+"""End-to-end driver: PISCO-train a ~126M-parameter decoder LM for a few
+hundred communication rounds on heterogeneous token streams.
+
+This is the deliverable (b) end-to-end example: real model (GQA + SwiGLU,
+12 layers, d_model 768, vocab 8192 ~ 126M params), real data pipeline
+(per-agent Zipf streams with distinct bigram structure = heterogeneity),
+PISCO rounds with a Bernoulli(p) server schedule, checkpointing, and eval.
+
+    PYTHONPATH=src python examples/train_federated_lm.py --rounds 300
+
+On the CPU container a round takes O(10 s); pass --rounds 20 for a smoke run.
+The same ModelBundle/step functions drive the production mesh via
+repro.launch.{train,dryrun}.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.core import PiscoConfig, dense_mixing, make_topology, replicate_params
+from repro.core.pisco import init_state, make_round_fn
+from repro.core.schedule import CommAccountant, make_schedule
+from repro.data.synthetic import synthetic_lm_tokens
+from repro.models import ModelConfig, get_bundle
+
+LM_100M = ModelConfig(
+    name="pisco-lm-100m",
+    arch_type="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=8192,
+    mlp_type="swiglu",
+    dtype="float32",
+    attn_chunk=256,
+    remat=False,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=300)
+    ap.add_argument("--n-agents", type=int, default=4)
+    ap.add_argument("--t-o", type=int, default=1)
+    ap.add_argument("--p", type=float, default=0.1)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--eta-l", type=float, default=0.1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = LM_100M
+    bundle = get_bundle(cfg)
+    n_params = cfg.param_count()
+    print(f"model={cfg.name}: {n_params/1e6:.0f}M params, "
+          f"{args.n_agents} agents, T_o={args.t_o}, p={args.p}")
+
+    # heterogeneous per-agent streams (different bigram structure per agent)
+    streams = [
+        synthetic_lm_tokens(500_000, cfg.vocab_size, seed=31 * a + 1)
+        for a in range(args.n_agents)
+    ]
+    rng = np.random.default_rng(0)
+
+    def sample_round(_k):
+        def one_set():
+            out = []
+            for a in range(args.n_agents):
+                s = streams[a]
+                starts = rng.integers(0, len(s) - args.seq - 1, size=args.batch)
+                out.append(np.stack([s[i : i + args.seq] for i in starts]))
+            return np.stack(out)
+
+        sets = np.stack([one_set() for _ in range(args.t_o + 1)])
+        local = {"tokens": jnp.asarray(sets[: args.t_o])}
+        comm = {"tokens": jnp.asarray(sets[-1])}
+        return local, comm
+
+    pcfg = PiscoConfig(
+        n_agents=args.n_agents, t_o=args.t_o, eta_l=args.eta_l, eta_c=1.0, p=args.p
+    )
+    topo = make_topology("ring", args.n_agents)
+    mixing = dense_mixing(topo)
+    gossip = jax.jit(make_round_fn(bundle.loss, pcfg, mixing, global_round=False))
+    srv = jax.jit(make_round_fn(bundle.loss, pcfg, mixing, global_round=True))
+    schedule = make_schedule(args.p, 0)
+    acct = CommAccountant()
+
+    params = bundle.init(jax.random.PRNGKey(0))
+    x0 = replicate_params(params, args.n_agents)
+    local0, comm0 = sample_round(-1)
+    state = init_state(bundle.loss, x0, comm0)
+
+    losses = []
+    t0 = time.perf_counter()
+    for k in range(args.rounds):
+        local, comm = sample_round(k)
+        is_global = schedule(k)
+        acct.record(is_global)
+        state, metrics = (srv if is_global else gossip)(state, local, comm)
+        losses.append(float(metrics.loss))
+        if k % args.log_every == 0 or k == args.rounds - 1:
+            dt = time.perf_counter() - t0
+            print(
+                f"round {k:4d} [{'J' if is_global else 'W'}] loss={losses[-1]:.4f} "
+                f"consensus={float(metrics.consensus_err):.2e} ({dt/(k+1):.1f}s/round)"
+            )
+        if args.ckpt_dir and (k + 1) % 100 == 0:
+            save_checkpoint(args.ckpt_dir, k + 1, state)
+
+    print(
+        f"\nfinal: loss {losses[0]:.4f} -> {losses[-1]:.4f} over {args.rounds} rounds "
+        f"({acct.agent_to_agent} gossip / {acct.agent_to_server} server)"
+    )
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Pytree checkpointing: npz payload + json manifest, atomic writes.
+
+Works for any pytree of arrays (PISCO states, model params, optimizer
+states).  Leaves are flattened with jax.tree_util key-paths so restore does
+not need the original tree definition — it rebuilds nested dicts/lists/tuples
+from the manifest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_CKPT_RE = re.compile(r"^ckpt_(\d+)\.npz$")
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(_path_elem_str(p) for p in path)
+        items.append((key, np.asarray(leaf)))
+    return items
+
+
+def _path_elem_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return f"d:{p.key}"
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"s:{p.idx}"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return f"a:{p.name}"
+    return f"x:{p}"
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
+    """Atomically write ckpt_<step>.npz (+ manifest inside the npz)."""
+    os.makedirs(directory, exist_ok=True)
+    items = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "keys": [k for k, _ in items],
+        "structure": _structure_of(tree),
+    }
+    payload = {f"arr_{i}": arr for i, (_, arr) in enumerate(items)}
+    payload["__manifest__"] = np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8
+    )
+    path = os.path.join(directory, f"ckpt_{step}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return path
+
+
+def _structure_of(tree: PyTree):
+    """JSON-serializable recursive structure descriptor."""
+    if isinstance(tree, dict):
+        return {
+            "kind": "dict",
+            # jax flattens dict keys in sorted order — mirror it exactly
+            "items": {str(k): _structure_of(tree[k]) for k in sorted(tree)},
+        }
+    if isinstance(tree, (list,)):
+        return {"kind": "list", "items": [_structure_of(v) for v in tree]}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):  # namedtuple
+        return {
+            "kind": "namedtuple",
+            "fields": list(tree._fields),
+            "items": [_structure_of(v) for v in tree],
+        }
+    if isinstance(tree, tuple):
+        return {"kind": "tuple", "items": [_structure_of(v) for v in tree]}
+    return {"kind": "leaf"}
+
+
+def _rebuild(structure, leaves_iter):
+    kind = structure["kind"]
+    if kind == "dict":
+        return {k: _rebuild(v, leaves_iter) for k, v in structure["items"].items()}
+    if kind == "list":
+        return [_rebuild(v, leaves_iter) for v in structure["items"]]
+    if kind in ("tuple", "namedtuple"):
+        vals = [_rebuild(v, leaves_iter) for v in structure["items"]]
+        return tuple(vals)
+    return next(leaves_iter)
+
+
+def restore_checkpoint(path: str) -> tuple:
+    """Returns (step, tree). Namedtuples come back as plain tuples."""
+    with np.load(path) as data:
+        manifest = json.loads(bytes(data["__manifest__"].tobytes()).decode())
+        arrays = [data[f"arr_{i}"] for i in range(len(manifest["keys"]))]
+    tree = _rebuild(manifest["structure"], iter(arrays))
+    return manifest["step"], tree
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for name in os.listdir(directory):
+        m = _CKPT_RE.match(name)
+        if m and int(m.group(1)) > best_step:
+            best_step = int(m.group(1))
+            best = os.path.join(directory, name)
+    return best

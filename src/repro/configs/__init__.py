@@ -1,0 +1,62 @@
+"""Architecture registry: the 10 assigned configs + shapes + variants.
+
+``get_config(arch_id)`` / ``get_reduced(arch_id)`` resolve by the public
+architecture id (dashes), e.g. ``--arch qwen3-8b`` in the launchers.
+"""
+from __future__ import annotations
+
+from repro.configs import (
+    deepseek_v2_lite_16b,
+    granite_20b,
+    jamba_v01_52b,
+    mamba2_370m,
+    mixtral_8x7b,
+    nemotron_4_340b,
+    qwen2_5_14b,
+    qwen2_vl_2b,
+    qwen3_8b,
+    seamless_m4t_medium,
+)
+from repro.configs.shapes import SHAPES, InputShape
+
+_MODULES = {
+    m.ARCH_ID: m
+    for m in (
+        nemotron_4_340b,
+        seamless_m4t_medium,
+        qwen2_vl_2b,
+        jamba_v01_52b,
+        deepseek_v2_lite_16b,
+        mamba2_370m,
+        qwen3_8b,
+        qwen2_5_14b,
+        mixtral_8x7b,
+        granite_20b,
+    )
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+# Beyond-paper variants (EXPERIMENTS.md §Perf)
+_VARIANTS = {
+    "qwen3-8b-swa": lambda dtype="bfloat16": qwen3_8b.sliding_window_variant(dtype),
+}
+
+
+def get_config(arch_id: str, dtype: str = "bfloat16"):
+    if arch_id in _VARIANTS:
+        return _VARIANTS[arch_id](dtype)
+    return _MODULES[arch_id].config(dtype)
+
+
+def get_reduced(arch_id: str, dtype: str = "float32"):
+    return _MODULES[arch_id.removesuffix("-swa")].reduced(dtype)
+
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "InputShape",
+    "get_config",
+    "get_reduced",
+]

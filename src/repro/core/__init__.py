@@ -1,0 +1,49 @@
+"""PISCO core: the paper's contribution as a composable JAX module."""
+from repro.core.pisco import (
+    PiscoConfig,
+    PiscoState,
+    RoundMetrics,
+    init_state,
+    make_round_fn,
+    make_stacked_value_and_grad,
+    replicate_params,
+    decentralized_config,
+    federated_config,
+)
+from repro.core.topology import (
+    Topology,
+    make_topology,
+    mixing_rate,
+    expected_mixing_rate,
+    is_doubly_stochastic,
+    is_connected,
+    global_matrix,
+)
+from repro.core.mixing import (
+    MixingOps,
+    dense_mixing,
+    identity_mixing,
+    collective_global_mixing,
+    collective_shift_mixing,
+    collective_dense_mixing,
+    hierarchical_mixing,
+)
+from repro.core.schedule import (
+    BernoulliSchedule,
+    PeriodicSchedule,
+    CommAccountant,
+    make_schedule,
+)
+from repro.core.trainer import History, run_training, make_algorithm_round_fns
+
+__all__ = [
+    "PiscoConfig", "PiscoState", "RoundMetrics", "init_state", "make_round_fn",
+    "make_stacked_value_and_grad", "replicate_params", "decentralized_config",
+    "federated_config", "Topology", "make_topology", "mixing_rate",
+    "expected_mixing_rate", "is_doubly_stochastic", "is_connected",
+    "global_matrix", "MixingOps", "dense_mixing", "identity_mixing",
+    "collective_global_mixing", "collective_shift_mixing",
+    "collective_dense_mixing", "hierarchical_mixing", "BernoulliSchedule",
+    "PeriodicSchedule", "CommAccountant", "make_schedule", "History",
+    "run_training", "make_algorithm_round_fns",
+]

@@ -1,0 +1,237 @@
+"""Baseline algorithms the paper compares against (Tables 1 & 2).
+
+All baselines share PISCO's substrate: agent-stacked pytrees, the
+:class:`~repro.core.mixing.MixingOps` communication layer, per-agent loss
+functions, and host-side schedules.  Implemented:
+
+* DSGD           — gossip SGD [NO09]
+* Gossip-PGA     — gossip SGD + periodic global averaging every H [CYZ+21]
+* DSGT           — distributed stochastic gradient tracking [PN21]
+* Periodical-GT  — GT + T_o local updates, gossip every round [LLKS24]
+                   (== PISCO with p = 0; provided as a named wrapper)
+* FedAvg         — T_o local SGD steps + server averaging [MMR+17, LHY+20]
+* SCAFFOLD       — FedAvg + control variates [KKM+20]
+
+Each exposes ``init(loss_fn, x0, batch0)`` and round functions with the same
+signature as PISCO's, so the shared trainer drives any of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mixing import MixingOps
+from repro.core.pisco import (
+    LossFn,
+    PiscoConfig,
+    RoundMetrics,
+    _consensus_error,
+    make_round_fn,
+    make_stacked_value_and_grad,
+    init_state as pisco_init_state,
+)
+from repro.utils.pytree import tree_add, tree_sub, tree_sq_norm
+
+PyTree = Any
+
+
+def _metrics(loss, g_stacked, x) -> RoundMetrics:
+    gbar = jax.tree.map(lambda v: jnp.mean(v, axis=0), g_stacked)
+    n = jax.tree.leaves(x)[0].shape[0]
+    return RoundMetrics(
+        loss=jnp.mean(loss),
+        grad_sq_norm=tree_sq_norm(gbar),
+        consensus_err=_consensus_error(x) / n,
+    )
+
+
+# ---------------------------------------------------------------------------
+# DSGD / Gossip-PGA
+# ---------------------------------------------------------------------------
+
+
+class SGDState(NamedTuple):
+    x: PyTree
+    step: jnp.ndarray
+
+
+def dsgd_init(loss_fn: LossFn, x0: PyTree, batch0: Any) -> SGDState:
+    del loss_fn, batch0
+    return SGDState(x=x0, step=jnp.zeros((), jnp.int32))
+
+
+def make_dsgd_round_fn(
+    loss_fn: LossFn,
+    eta: float,
+    mixing: MixingOps,
+    *,
+    global_round: bool,
+    t_o: int = 1,
+) -> Callable:
+    """One DSGD round: ``x <- mix(x - eta g)`` (T_o local SGD steps first when
+    t_o > 1, which with global mixing == FedAvg / local SGD)."""
+    stacked_vg = make_stacked_value_and_grad(loss_fn)
+    mix = mixing.global_avg if global_round else mixing.gossip
+
+    def round_fn(state: SGDState, local_batches, comm_batch):
+        def step(x, batch_t):
+            loss, g = stacked_vg(x, batch_t)
+            x = jax.tree.map(lambda xi, gi: xi - eta * gi, x, g)
+            return x, (loss, g)
+
+        x, (losses, gs) = jax.lax.scan(step, state.x, local_batches)
+        # one more SGD step on the comm batch, then mix (keeps the same
+        # gradient budget per round as PISCO: T_o + 1 evaluations)
+        loss_c, g_c = stacked_vg(x, comm_batch)
+        x = jax.tree.map(lambda xi, gi: xi - eta * gi, x, g_c)
+        x = mix(x)
+        new_state = SGDState(x=x, step=state.step + 1)
+        return new_state, _metrics(
+            (jnp.mean(losses) * t_o + jnp.mean(loss_c)) / (t_o + 1), g_c, x
+        )
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# DSGT [PN21]
+# ---------------------------------------------------------------------------
+
+
+class GTState(NamedTuple):
+    x: PyTree
+    y: PyTree
+    g: PyTree
+    step: jnp.ndarray
+
+
+def dsgt_init(loss_fn: LossFn, x0: PyTree, batch0: Any) -> GTState:
+    s = pisco_init_state(loss_fn, x0, batch0)
+    return GTState(x=s.x, y=s.y, g=s.g, step=s.step)
+
+
+def make_dsgt_round_fn(
+    loss_fn: LossFn, eta: float, mixing: MixingOps, *, global_round: bool = False
+) -> Callable:
+    """DSGT:  x+ = mix(x - eta y);  y+ = mix(y) + g(x+) - g(x)."""
+    stacked_vg = make_stacked_value_and_grad(loss_fn)
+    mix = mixing.global_avg if global_round else mixing.gossip
+
+    def round_fn(state: GTState, local_batches, comm_batch):
+        del local_batches  # DSGT has no local phase; comm_batch is Z^{k+1}
+        x_new = mix(jax.tree.map(lambda xi, yi: xi - eta * yi, state.x, state.y))
+        loss, g_new = stacked_vg(x_new, comm_batch)
+        y_new = tree_add(mix(state.y), tree_sub(g_new, state.g))
+        new_state = GTState(x=x_new, y=y_new, g=g_new, step=state.step + 1)
+        return new_state, _metrics(loss, g_new, x_new)
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Periodical-GT (PISCO p=0 named wrapper)
+# ---------------------------------------------------------------------------
+
+
+def make_periodical_gt_round_fn(
+    loss_fn: LossFn, cfg: PiscoConfig, mixing: MixingOps
+) -> Callable:
+    """[LLKS24]: gradient tracking with T_o local steps, gossip every round —
+    exactly PISCO's gossip round (Remark 1)."""
+    return make_round_fn(loss_fn, cfg, mixing, global_round=False)
+
+
+# ---------------------------------------------------------------------------
+# SCAFFOLD [KKM+20] (option II control variates)
+# ---------------------------------------------------------------------------
+
+
+class ScaffoldState(NamedTuple):
+    x: PyTree  # agent-stacked copies of the server model (kept in sync)
+    c_i: PyTree  # agent control variates (stacked)
+    c: PyTree  # server control variate (stacked-broadcast for layout parity)
+    step: jnp.ndarray
+
+
+def scaffold_init(loss_fn: LossFn, x0: PyTree, batch0: Any) -> ScaffoldState:
+    _, g0 = make_stacked_value_and_grad(loss_fn)(x0, batch0)
+    c = jax.tree.map(
+        lambda v: jnp.broadcast_to(jnp.mean(v, axis=0, keepdims=True), v.shape), g0
+    )
+    return ScaffoldState(x=x0, c_i=g0, c=c, step=jnp.zeros((), jnp.int32))
+
+
+def make_scaffold_round_fn(
+    loss_fn: LossFn, eta_l: float, eta_g: float, t_o: int, mixing: MixingOps
+) -> Callable:
+    """SCAFFOLD round (always agent-to-server; the federated anchor of Table 2).
+
+    Local:  x <- x - eta_l (g_i(x) - c_i + c), T_o+1 steps.
+    Then:   c_i+ = c_i - c + (x_k - x_To) / ((T_o+1) eta_l)
+            x+   = x_k + eta_g * mean(x_To - x_k);  c+ = mean(c_i+)
+    """
+    stacked_vg = make_stacked_value_and_grad(loss_fn)
+    g_avg = mixing.global_avg
+
+    def round_fn(state: ScaffoldState, local_batches, comm_batch):
+        correction = tree_sub(state.c, state.c_i)
+
+        def step(carry, batch_t):
+            x = carry
+            loss, g = stacked_vg(x, batch_t)
+            x = jax.tree.map(
+                lambda xi, gi, ci: xi - eta_l * (gi + ci), x, g, correction
+            )
+            return x, (loss, g)
+
+        x_to, (losses, _) = jax.lax.scan(step, state.x, local_batches)
+        loss_c, g_c = stacked_vg(x_to, comm_batch)
+        x_to = jax.tree.map(
+            lambda xi, gi, ci: xi - eta_l * (gi + ci), x_to, g_c, correction
+        )
+
+        steps = (t_o + 1) * eta_l
+        c_i_new = jax.tree.map(
+            lambda ci, c, xk, xt: ci - c + (xk - xt) / steps,
+            state.c_i,
+            state.c,
+            state.x,
+            x_to,
+        )
+        delta = g_avg(tree_sub(x_to, state.x))
+        x_new = jax.tree.map(lambda xk, d: xk + eta_g * d, state.x, delta)
+        c_new = g_avg(c_i_new)
+        new_state = ScaffoldState(
+            x=x_new, c_i=c_i_new, c=c_new, step=state.step + 1
+        )
+        return new_state, _metrics(
+            (jnp.mean(losses) * t_o + jnp.mean(loss_c)) / (t_o + 1), g_c, x_new
+        )
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Registry for the benchmark harness
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineSpec:
+    name: str
+    server_based: bool  # True => every comm round is agent-to-server
+    uses_local_updates: bool
+
+
+BASELINES = {
+    "dsgd": BaselineSpec("dsgd", server_based=False, uses_local_updates=False),
+    "gossip_pga": BaselineSpec("gossip_pga", server_based=False, uses_local_updates=False),
+    "dsgt": BaselineSpec("dsgt", server_based=False, uses_local_updates=False),
+    "periodical_gt": BaselineSpec("periodical_gt", server_based=False, uses_local_updates=True),
+    "fedavg": BaselineSpec("fedavg", server_based=True, uses_local_updates=True),
+    "scaffold": BaselineSpec("scaffold", server_based=True, uses_local_updates=True),
+    "pisco": BaselineSpec("pisco", server_based=False, uses_local_updates=True),
+}

@@ -1,0 +1,299 @@
+"""Mixing operators: the communication layer of PISCO (paper eq. 4a/4c).
+
+Two families, one interface (:class:`MixingOps`):
+
+* **Dense / simulation mixers** — agent-stacked pytrees live on one device (or
+  are auto-sharded by pjit); gossip is an einsum with the dense mixing matrix
+  ``W`` and global averaging is a mean over the agent axis.  Under ``jit`` with
+  the agent axis sharded, XLA lowers these to ``all-gather`` + local matmul and
+  ``all-reduce`` respectively — correct for *any* topology (ER, path,
+  disconnected), at the cost of an all-gather.
+
+* **Collective mixers** — TPU-native path used by the launcher: gossip over a
+  circulant topology (ring on the agent axis, torus over (pod, data)) becomes a
+  weighted sum of ``lax.ppermute`` block rotations — pure neighbor ICI traffic,
+  the whole point of the paper's agent-to-agent rounds.  Global averaging is a
+  ``psum`` over the agent mesh axes — the "server" round.  Both are expressed
+  with ``shard_map`` so the collectives appear explicitly in the lowered HLO
+  (which the roofline analysis parses).
+
+The probabilistic `W^k = J w.p. p else W` draw is hoisted to the host launcher
+(see DESIGN.md §2): the trainer compiles one step function per mixing kind and
+dispatches per round.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.topology import Topology
+from repro.utils.pytree import tree_agent_mean, tree_agent_mix
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MixingOps:
+    """The two communication primitives Algorithm 1 needs."""
+
+    gossip: Callable[[PyTree], PyTree]  # X -> X W
+    global_avg: Callable[[PyTree], PyTree]  # X -> X J
+    name: str = "dense"
+    # Bytes moved per invocation per agent, filled in by the launcher for
+    # communication-cost accounting (benchmarks fig4).
+    gossip_edges: int = 0  # number of neighbor messages per gossip round
+
+
+# ---------------------------------------------------------------------------
+# Dense / simulation mixers
+# ---------------------------------------------------------------------------
+
+
+def dense_mixing(topology: Topology) -> MixingOps:
+    """Reference mixers over agent-stacked pytrees (leading axis = agents)."""
+    w = jnp.asarray(topology.w, dtype=jnp.float32)
+
+    def gossip(tree: PyTree) -> PyTree:
+        return tree_agent_mix(tree, w)
+
+    return MixingOps(
+        gossip=gossip,
+        global_avg=tree_agent_mean,
+        name=f"dense/{topology.name}",
+        gossip_edges=int(topology.adj.sum()) // 2,
+    )
+
+
+def identity_mixing(n_agents: int) -> MixingOps:
+    """No communication at all (an isolated baseline / ablation)."""
+    return MixingOps(
+        gossip=lambda t: t, global_avg=tree_agent_mean, name="identity", gossip_edges=0
+    )
+
+
+# ---------------------------------------------------------------------------
+# Collective mixers (shard_map + lax collectives)
+# ---------------------------------------------------------------------------
+
+
+def _as_tuple(x) -> tuple:
+    return tuple(x) if isinstance(x, (tuple, list)) else (x,)
+
+
+def _leaf_local_spec(spec: P) -> P:
+    """Inside shard_map every mentioned axis is already local; mixing acts on
+    axis 0 (the agent axis), other axes stay sharded => specs pass through."""
+    return spec
+
+
+def collective_global_mixing(
+    mesh: jax.sharding.Mesh,
+    agent_axes: Sequence[str],
+    spec_tree: PyTree,
+) -> MixingOps:
+    """Global averaging (J) as an explicit psum over the agent mesh axes.
+
+    ``spec_tree`` is the PartitionSpec tree of the agent-stacked state: each
+    leaf spec must shard axis 0 over ``agent_axes``.
+    """
+    agent_axes = _as_tuple(agent_axes)
+    n_agents = int(np.prod([mesh.shape[a] for a in agent_axes]))
+
+    def avg(tree: PyTree) -> PyTree:
+        def per_shard(local_tree):
+            def leaf(x):
+                acc = jax.lax.psum(x.astype(jnp.float32), agent_axes)
+                return (acc / n_agents).astype(x.dtype)
+
+            return jax.tree.map(leaf, local_tree)
+
+        return jax.shard_map(
+            per_shard,
+            mesh=mesh,
+            in_specs=(spec_tree,),
+            out_specs=spec_tree,
+            check_vma=False,
+        )(tree)
+
+    return MixingOps(
+        gossip=avg,  # placeholder; callers pair this with a gossip mixer
+        global_avg=avg,
+        name="collective/global",
+    )
+
+
+def collective_shift_mixing(
+    mesh: jax.sharding.Mesh,
+    agent_axes: Sequence[str],
+    spec_tree: PyTree,
+    shifts_per_axis: dict,
+    *,
+    wire_dtype: Optional[str] = None,
+) -> MixingOps:
+    """Circulant gossip as weighted ppermute block rotations.
+
+    ``shifts_per_axis`` maps mesh axis name -> sequence of (shift, weight)
+    pairs (shift 0 = self weight; recorded on any one axis).  A ring over the
+    agent axis is ``{axis: [(0, w0), (1, w1), (-1, w1)]}``; the multi-pod
+    torus uses entries for both "pod" and "data".
+
+    ``wire_dtype`` controls what goes over the wire (§Perf iteration):
+    * None (default)    — permute in the state's native dtype (bf16 states
+                          move bf16 bytes), accumulate the weighted combine
+                          in fp32.
+    * "float32"         — upcast before the permute (2x traffic for bf16
+                          states; the numerically-conservative baseline).
+    """
+    agent_axes = _as_tuple(agent_axes)
+    wire = jnp.dtype(wire_dtype) if wire_dtype is not None else None
+
+    def gossip(tree: PyTree) -> PyTree:
+        def per_shard(local_tree):
+            def leaf(x):
+                xw = x if wire is None else x.astype(wire)
+                acc = jnp.zeros_like(x, dtype=jnp.float32)
+                for axis_name, pairs in shifts_per_axis.items():
+                    size = mesh.shape[axis_name]
+                    for shift, weight in pairs:
+                        if shift == 0:
+                            continue
+                        perm = [(s, (s + shift) % size) for s in range(size)]
+                        moved = jax.lax.ppermute(xw, axis_name, perm)
+                        if wire is None and moved.dtype != jnp.float32:
+                            # keep the wire payload in the narrow dtype: the
+                            # barrier stops XLA's simplifier from hoisting the
+                            # f32 convert above the collective-permute
+                            moved = jax.lax.optimization_barrier(moved)
+                        acc = acc + weight * moved.astype(jnp.float32)
+                self_w = 0.0
+                for pairs in shifts_per_axis.values():
+                    for shift, weight in pairs:
+                        if shift == 0:
+                            self_w += weight
+                acc = acc + self_w * x.astype(jnp.float32)
+                return acc.astype(x.dtype)
+
+            return jax.tree.map(leaf, local_tree)
+
+        return jax.shard_map(
+            per_shard,
+            mesh=mesh,
+            in_specs=(spec_tree,),
+            out_specs=spec_tree,
+            check_vma=False,
+        )(tree)
+
+    g = collective_global_mixing(mesh, agent_axes, spec_tree)
+    n_edges = sum(
+        len([s for s, _ in pairs if s != 0]) for pairs in shifts_per_axis.values()
+    )
+    return MixingOps(
+        gossip=gossip,
+        global_avg=g.global_avg,
+        name="collective/shift",
+        gossip_edges=n_edges,
+    )
+
+
+def collective_dense_mixing(
+    mesh: jax.sharding.Mesh,
+    agent_axes: Sequence[str],
+    spec_tree: PyTree,
+    topology: Topology,
+) -> MixingOps:
+    """Arbitrary-W gossip on a mesh: all_gather over the agent axes + local
+    weighted reduction.  Used for the paper-faithful non-circulant topologies
+    (ER / path / disconnected) when running distributed."""
+    agent_axes = _as_tuple(agent_axes)
+    w = topology.w.astype(np.float32)
+    n = topology.n_agents
+
+    def gossip(tree: PyTree) -> PyTree:
+        def per_shard(local_tree):
+            # Linear agent index of this shard.
+            idx = jax.lax.axis_index(agent_axes)
+
+            def leaf(x):
+                # x: (1, ...) local block.  Gather all agents' blocks, combine.
+                full = jax.lax.all_gather(
+                    x.astype(jnp.float32), agent_axes, axis=0, tiled=True
+                )  # (n, ...)
+                row = jnp.asarray(w)[idx]  # (n,)
+                mixed = jnp.tensordot(row, full, axes=((0,), (0,)))
+                return mixed[None].astype(x.dtype)
+
+            return jax.tree.map(leaf, local_tree)
+
+        return jax.shard_map(
+            per_shard,
+            mesh=mesh,
+            in_specs=(spec_tree,),
+            out_specs=spec_tree,
+            check_vma=False,
+        )(tree)
+
+    g = collective_global_mixing(mesh, agent_axes, spec_tree)
+    return MixingOps(
+        gossip=gossip,
+        global_avg=g.global_avg,
+        name=f"collective/dense/{topology.name}",
+        gossip_edges=int(topology.adj.sum()) // 2,
+    )
+
+
+def compressed_mixing(
+    base: MixingOps,
+    bits: int = 8,
+) -> MixingOps:
+    """Beyond-paper extension (the paper's Conclusions list communication
+    compression [ZLL+22] as future work): quantize the state to ``bits``-bit
+    integers before gossip, dequantize after — 4x (int8) or 8x (int4) wire
+    savings on fp32 states.
+
+    Symmetric per-leaf scaling, no error feedback (BEER's EF would compose
+    here as a further iteration).  The server round (J) stays exact — the
+    expensive link gets the exact average, matching the paper's emphasis
+    that server rounds drive the consensus floor.
+    """
+    assert bits in (4, 8)
+    qmax = float(2 ** (bits - 1) - 1)
+
+    def quantize(tree: PyTree):
+        def leaf(x):
+            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax
+            q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+            return (q * scale).astype(x.dtype)
+
+        return jax.tree.map(leaf, tree)
+
+    def gossip(tree: PyTree) -> PyTree:
+        return base.gossip(quantize(tree))
+
+    return dataclasses.replace(
+        base,
+        gossip=gossip,
+        name=base.name + f"/q{bits}",
+    )
+
+
+def hierarchical_mixing(
+    mesh: jax.sharding.Mesh,
+    spec_tree: PyTree,
+    intra_axis: str = "data",
+    inter_axes: Sequence[str] = ("pod", "data"),
+    ring_weights: Sequence[float] = (0.5, 0.25, 0.25),
+) -> MixingOps:
+    """Beyond-paper hierarchical mode (DESIGN.md §6): gossip = ring over the
+    *intra-pod* data axis only (pure ICI), server round = psum over all agent
+    axes (crosses DCI).  This is HL-SGD-shaped communication with PISCO's
+    gradient tracking on top."""
+    w0, w1, w2 = ring_weights
+    shift = {intra_axis: [(0, w0), (1, w1), (-1, w2)]}
+    ops = collective_shift_mixing(mesh, inter_axes, spec_tree, shift)
+    return dataclasses.replace(ops, name="collective/hierarchical")

@@ -1,0 +1,195 @@
+"""PISCO — Algorithm 1 of the paper, verbatim, over agent-stacked pytrees.
+
+One communication round k (two stages):
+
+  Stage 1 — T_o *local* tracked-SGD steps, zero communication (eq. 3a-3c):
+      X^{k+1,t} = X^{k+1,t-1} - eta_l * Y^{k+1,t-1}
+      G^{k+1,t} = stochastic grads at X^{k+1,t}
+      Y^{k+1,t} = Y^{k+1,t-1} + G^{k+1,t} - G^{k+1,t-1}
+
+  Stage 2 — one mixing round with W^k = J w.p. p else W (eq. 4a-4c):
+      X^{k+1} = ((1-eta_c) X^k + eta_c (X^{k+1,T_o} - eta_l Y^{k+1,T_o})) W^k
+      G^{k+1} = stochastic grads at X^{k+1} on a fresh batch
+      Y^{k+1} = (Y^{k+1,T_o} + G^{k+1} - G^{k+1,T_o}) W^k
+
+The probabilistic draw of W^k is made by the *host* trainer (uniform across
+agents, i.i.d. per round — identical semantics to line 8 of Algorithm 1), which
+dispatches one of two jitted round functions.  See DESIGN.md §2.
+
+State invariant (Lemma 1, tested):  mean_i y_i == mean_i g_i  exactly, at every
+round and every local step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mixing import MixingOps
+from repro.utils.pytree import (
+    tree_add,
+    tree_axpy,
+    tree_scale,
+    tree_sq_norm,
+    tree_sub,
+)
+
+PyTree = Any
+# loss_fn(params, batch) -> scalar loss for ONE agent.
+LossFn = Callable[[PyTree, Any], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class PiscoConfig:
+    """Hyper-parameters of Algorithm 1."""
+
+    n_agents: int
+    t_o: int = 1  # number of local updates per round (T_o)
+    eta_l: float = 0.05  # local-update step size
+    eta_c: float = 1.0  # communication step size
+    p: float = 0.1  # agent-to-server probability
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.t_o >= 1, "T_o >= 1 (at least one local update)"
+        assert 0.0 <= self.p <= 1.0
+
+
+class PiscoState(NamedTuple):
+    """Agent-stacked algorithm state (leading axis = n_agents on every leaf)."""
+
+    x: PyTree  # model estimates X^k
+    y: PyTree  # gradient-tracking variables Y^k
+    g: PyTree  # last stochastic gradients G^k
+    step: jnp.ndarray  # round counter k
+
+
+class RoundMetrics(NamedTuple):
+    loss: jnp.ndarray  # mean over agents & local steps
+    grad_sq_norm: jnp.ndarray  # ||mean_i g_i||^2 (tracked-gradient proxy)
+    consensus_err: jnp.ndarray  # ||X - X_bar||_F^2 / n
+
+
+def make_stacked_value_and_grad(loss_fn: LossFn) -> Callable:
+    """vmap value_and_grad over the agent axis: each agent gets its own params
+    slice and its own batch slice."""
+    vg = jax.value_and_grad(loss_fn)
+    return jax.vmap(vg, in_axes=(0, 0))
+
+
+def init_state(loss_fn: LossFn, x0: PyTree, batch0: Any) -> PiscoState:
+    """Line 2: draw Z^0 and set Y^0 = G^0 = grads(X^0; Z^0).
+
+    ``x0`` must already be agent-stacked (typically every agent starts from the
+    same point: X^0 = x^0 1^T)."""
+    _, g0 = make_stacked_value_and_grad(loss_fn)(x0, batch0)
+    return PiscoState(x=x0, y=g0, g=g0, step=jnp.zeros((), jnp.int32))
+
+
+def replicate_params(params: PyTree, n_agents: int) -> PyTree:
+    """X^0 = x^0 1_n^T — identical start for all agents."""
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_agents,) + p.shape), params
+    )
+
+
+def _local_phase(
+    stacked_vg: Callable,
+    state: PiscoState,
+    local_batches: Any,  # leaves shaped (T_o, n_agents, ...)
+    eta_l: float,
+) -> Tuple[PyTree, PyTree, PyTree, jnp.ndarray]:
+    """Stage 1: lax.scan over the T_o local updates."""
+
+    def step(carry, batch_t):
+        x, y, g = carry
+        x = jax.tree.map(lambda xi, yi: xi - eta_l * yi, x, y)  # (3a)
+        loss, g_new = stacked_vg(x, batch_t)  # (3b)
+        y = tree_add(y, tree_sub(g_new, g))  # (3c)
+        return (x, y, g_new), jnp.mean(loss)
+
+    (x_to, y_to, g_to), losses = jax.lax.scan(
+        step, (state.x, state.y, state.g), local_batches
+    )
+    return x_to, y_to, g_to, jnp.mean(losses)
+
+
+def _consensus_error(x: PyTree) -> jnp.ndarray:
+    def leaf(v):
+        mean = jnp.mean(v, axis=0, keepdims=True)
+        return jnp.sum((v - mean) ** 2)
+
+    errs = jax.tree.map(leaf, x)
+    return jax.tree.reduce(jnp.add, errs)
+
+
+def make_round_fn(
+    loss_fn: LossFn,
+    cfg: PiscoConfig,
+    mixing: MixingOps,
+    *,
+    global_round: bool,
+    compute_metrics: bool = True,
+) -> Callable[[PiscoState, Any, Any], Tuple[PiscoState, RoundMetrics]]:
+    """Build one jittable PISCO round for a fixed W^k kind.
+
+    The trainer compiles this twice (gossip / global) and dispatches per the
+    host-side Bernoulli(p) draw.
+
+    Args to the returned fn:
+      state:         PiscoState
+      local_batches: pytree with leaves (T_o, n_agents, ...)
+      comm_batch:    pytree with leaves (n_agents, ...) — the fresh Z^{k+1}
+    """
+    stacked_vg = make_stacked_value_and_grad(loss_fn)
+    mix = mixing.global_avg if global_round else mixing.gossip
+
+    def round_fn(state: PiscoState, local_batches, comm_batch):
+        x_to, y_to, g_to, mean_loss = _local_phase(
+            stacked_vg, state, local_batches, cfg.eta_l
+        )
+        # (4a): X^{k+1} = ((1-eta_c) X^k + eta_c (X^{T_o} - eta_l Y^{T_o})) W^k
+        cand = jax.tree.map(
+            lambda xk, xt, yt: (1.0 - cfg.eta_c) * xk + cfg.eta_c * (xt - cfg.eta_l * yt),
+            state.x,
+            x_to,
+            y_to,
+        )
+        x_new = mix(cand)
+        # (4b): fresh-batch gradients at the mixed point
+        loss_c, g_new = stacked_vg(x_new, comm_batch)
+        # (4c): Y^{k+1} = (Y^{T_o} + G^{k+1} - G^{T_o}) W^k
+        y_new = mix(tree_add(y_to, tree_sub(g_new, g_to)))
+
+        new_state = PiscoState(x=x_new, y=y_new, g=g_new, step=state.step + 1)
+        if compute_metrics:
+            gbar = jax.tree.map(lambda v: jnp.mean(v, axis=0), g_new)
+            metrics = RoundMetrics(
+                loss=(mean_loss * cfg.t_o + jnp.mean(loss_c)) / (cfg.t_o + 1),
+                grad_sq_norm=tree_sq_norm(gbar),
+                consensus_err=_consensus_error(x_new) / cfg.n_agents,
+            )
+        else:
+            z = jnp.zeros(())
+            metrics = RoundMetrics(z, z, z)
+        return new_state, metrics
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Special cases (paper Remarks 1 & 2)
+# ---------------------------------------------------------------------------
+
+
+def decentralized_config(cfg: PiscoConfig) -> PiscoConfig:
+    """Remark 1: p = 0 — fully decentralized PISCO (gossip only)."""
+    return dataclasses.replace(cfg, p=0.0)
+
+
+def federated_config(cfg: PiscoConfig) -> PiscoConfig:
+    """Remark 2: p = 1 — federated PISCO (server every round; SCAFFOLD-like)."""
+    return dataclasses.replace(cfg, p=1.0)

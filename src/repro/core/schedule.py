@@ -1,0 +1,76 @@
+"""Host-side communication schedules.
+
+The paper's line 8 — ``W^k = J w.p. p else W`` — is an i.i.d. Bernoulli(p)
+sequence.  We also provide the deterministic every-H schedule of Gossip-PGA /
+HL-SGD for the baseline comparisons (Table 1), and an accountant that tallies
+agent-to-agent vs agent-to-server rounds (Figure 4's x/y axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CommAccountant:
+    """Counts communication rounds by kind (paper Fig. 4)."""
+
+    agent_to_agent: int = 0
+    agent_to_server: int = 0
+
+    def record(self, is_global: bool) -> None:
+        if is_global:
+            self.agent_to_server += 1
+        else:
+            self.agent_to_agent += 1
+
+    @property
+    def total(self) -> int:
+        return self.agent_to_agent + self.agent_to_server
+
+
+class BernoulliSchedule:
+    """PISCO's probabilistic schedule: True => server round (W^k = J)."""
+
+    def __init__(self, p: float, seed: int = 0):
+        assert 0.0 <= p <= 1.0
+        self.p = p
+        self._rng = np.random.default_rng(seed)
+
+    def __call__(self, step: int) -> bool:
+        if self.p <= 0.0:
+            return False
+        if self.p >= 1.0:
+            return True
+        return bool(self._rng.random() < self.p)
+
+
+class PeriodicSchedule:
+    """Gossip-PGA / HL-SGD style: server every H rounds (H = period)."""
+
+    def __init__(self, period: int):
+        assert period >= 1
+        self.period = period
+
+    def __call__(self, step: int) -> bool:
+        return (step + 1) % self.period == 0
+
+
+class NeverSchedule:
+    def __call__(self, step: int) -> bool:
+        return False
+
+
+class AlwaysSchedule:
+    def __call__(self, step: int) -> bool:
+        return True
+
+
+def make_schedule(p: float, seed: int = 0):
+    if p <= 0.0:
+        return NeverSchedule()
+    if p >= 1.0:
+        return AlwaysSchedule()
+    return BernoulliSchedule(p, seed)

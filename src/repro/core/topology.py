@@ -1,0 +1,270 @@
+"""Communication graphs and mixing matrices (paper §2.1).
+
+Everything here is *host-side* (numpy): topologies are static metadata that the
+launcher turns into either a dense mixing matrix (general ``W``) or a neighbor
+schedule for ``ppermute``-based collective mixing.
+
+Definition 1 of the paper: ``W`` is nonnegative, doubly stochastic, with
+``w_ij = 0`` iff ``{i,j}`` is not an edge (i != j), and the mixing rate is
+
+    lambda_w = 1 - || W - (1/n) 11^T ||_2^2 = 1 - lambda^2,
+
+where ``lambda`` is the second-largest singular value of ``W``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Graph constructors (adjacency, no self loops)
+# ---------------------------------------------------------------------------
+
+
+def ring_graph(n: int) -> np.ndarray:
+    """Ring: agent i connects to (i-1) % n and (i+1) % n."""
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        adj[i, (i + 1) % n] = True
+        adj[i, (i - 1) % n] = True
+    if n <= 2:  # ring over <=2 nodes degenerates to a single edge / nothing
+        adj = adj | adj.T
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def path_graph(n: int) -> np.ndarray:
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(n - 1):
+        adj[i, i + 1] = adj[i + 1, i] = True
+    return adj
+
+
+def star_graph(n: int) -> np.ndarray:
+    """Agent 0 is the hub (useful as an explicit server-like gossip graph)."""
+    adj = np.zeros((n, n), dtype=bool)
+    adj[0, 1:] = adj[1:, 0] = True
+    return adj
+
+
+def fully_connected_graph(n: int) -> np.ndarray:
+    adj = np.ones((n, n), dtype=bool)
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def torus_graph(rows: int, cols: int) -> np.ndarray:
+    """2-D torus over ``rows*cols`` agents (the natural ICI topology)."""
+    n = rows * cols
+    adj = np.zeros((n, n), dtype=bool)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                j = ((r + dr) % rows) * cols + (c + dc) % cols
+                if i != j:
+                    adj[i, j] = True
+    return adj
+
+
+def erdos_renyi_graph(n: int, prob: float, seed: int = 0) -> np.ndarray:
+    """Undirected ER graph; may be disconnected (lambda_w = 0), which the
+    paper explicitly exercises (Fig. 6(b)) and Assumption 1 permits when p>0."""
+    rng = np.random.default_rng(seed)
+    upper = rng.random((n, n)) < prob
+    adj = np.triu(upper, k=1)
+    adj = adj | adj.T
+    return adj.astype(bool)
+
+
+def disconnected_graph(n: int, n_components: int = 2) -> np.ndarray:
+    """Deterministically disconnected: ``n_components`` disjoint rings."""
+    adj = np.zeros((n, n), dtype=bool)
+    bounds = np.linspace(0, n, n_components + 1).astype(int)
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        size = b - a
+        if size <= 1:
+            continue
+        sub = ring_graph(size)
+        adj[a:b, a:b] = sub
+    return adj
+
+
+GRAPHS = {
+    "ring": ring_graph,
+    "path": path_graph,
+    "star": star_graph,
+    "full": fully_connected_graph,
+    "erdos_renyi": erdos_renyi_graph,
+    "disconnected": disconnected_graph,
+}
+
+# ---------------------------------------------------------------------------
+# Mixing-matrix weightings
+# ---------------------------------------------------------------------------
+
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings weights: symmetric, doubly stochastic for any graph."""
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    w = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        for j in range(n):
+            if i != j and adj[i, j]:
+                w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def best_constant_weights(adj: np.ndarray) -> np.ndarray:
+    """Xiao–Boyd best-constant edge weight ``W = I - a L`` with
+    ``a = 2 / (lam_1(L) + lam_{n-1}(L))`` — the single-parameter optimum from
+    [XB04], a cheap stand-in for the full-SDP symmetric FDLA matrix the paper
+    uses; it matches FDLA's asymptotics on the ring/path graphs we reproduce."""
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    lap = np.diag(deg.astype(np.float64)) - adj.astype(np.float64)
+    eig = np.linalg.eigvalsh(lap)
+    # eig[0] ~ 0; smallest nonzero is eig[1] (may also be 0 when disconnected)
+    lam_max = eig[-1]
+    lam_2 = eig[1]
+    if lam_max + lam_2 <= 1e-12:  # empty graph
+        return np.eye(n)
+    alpha = 2.0 / (lam_max + lam_2) if lam_2 > 1e-12 else 1.0 / lam_max
+    # Definition 1 requires a NONNEGATIVE W; the unconstrained best-constant
+    # weight can push hub diagonals negative (e.g. star graphs) — clamp so
+    # diag(W) = 1 - alpha*deg >= 0.
+    deg_max = float(deg.max()) if n > 1 else 1.0
+    if deg_max > 0:
+        alpha = min(alpha, 1.0 / deg_max)
+    return np.eye(n) - alpha * lap
+
+
+WEIGHTINGS = {
+    "metropolis": metropolis_weights,
+    "best_constant": best_constant_weights,
+}
+
+# ---------------------------------------------------------------------------
+# Spectral quantities (Definition 1)
+# ---------------------------------------------------------------------------
+
+
+def global_matrix(n: int) -> np.ndarray:
+    """J = (1/n) 1 1^T — the server / global-averaging mixing matrix."""
+    return np.full((n, n), 1.0 / n)
+
+
+def second_singular_value(w: np.ndarray) -> float:
+    n = w.shape[0]
+    dev = w - global_matrix(n)
+    return float(np.linalg.norm(dev, ord=2))
+
+
+def mixing_rate(w: np.ndarray) -> float:
+    """lambda_w = 1 - ||W - J||_2^2  (0 for disconnected, 1 for J itself)."""
+    lam = second_singular_value(w)
+    return max(0.0, 1.0 - lam * lam)
+
+
+def expected_mixing_rate(lambda_w: float, p: float) -> float:
+    """Assumption 1: lambda_p = lambda_w + p (1 - lambda_w)."""
+    return lambda_w + p * (1.0 - lambda_w)
+
+
+def is_doubly_stochastic(w: np.ndarray, tol: float = 1e-8) -> bool:
+    n = w.shape[0]
+    ones = np.ones(n)
+    return (
+        bool(np.all(w >= -tol))
+        and np.allclose(w @ ones, ones, atol=tol)
+        and np.allclose(ones @ w, ones, atol=tol)
+    )
+
+
+def is_connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    seen = np.zeros(n, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        i = stack.pop()
+        for j in np.nonzero(adj[i])[0]:
+            if not seen[j]:
+                seen[j] = True
+                stack.append(int(j))
+    return bool(seen.all())
+
+
+# ---------------------------------------------------------------------------
+# Topology: the launcher-facing bundle
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A gossip graph + weighting, with everything the mixers need."""
+
+    name: str
+    n_agents: int
+    w: np.ndarray  # (n, n) doubly stochastic
+    adj: np.ndarray  # (n, n) bool
+    lambda_w: float
+    connected: bool
+    # For collective (ppermute) mixing: neighbor shifts valid for
+    # shift-invariant graphs (ring/torus); None => dense mixing only.
+    shifts: Optional[tuple] = None  # tuple of (shift, weight) incl. (0, w_self)
+
+    def expected_rate(self, p: float) -> float:
+        return expected_mixing_rate(self.lambda_w, p)
+
+
+def _ring_shifts(w: np.ndarray) -> Optional[tuple]:
+    """Detect a circulant structure and extract (shift, weight) pairs."""
+    n = w.shape[0]
+    first = w[0]
+    for i in range(1, n):
+        if not np.allclose(np.roll(first, i), w[i], atol=1e-10):
+            return None
+    shifts = tuple(
+        (int(j), float(first[j])) for j in range(n) if abs(first[j]) > 1e-12
+    )
+    return shifts
+
+
+def make_topology(
+    name: str,
+    n_agents: int,
+    weighting: str = "metropolis",
+    *,
+    prob: float = 0.3,
+    seed: int = 0,
+    rows: Optional[int] = None,
+    n_components: int = 2,
+) -> Topology:
+    """Build a named topology. ``name`` in GRAPHS or 'torus'."""
+    if name == "erdos_renyi":
+        adj = erdos_renyi_graph(n_agents, prob, seed)
+    elif name == "disconnected":
+        adj = disconnected_graph(n_agents, n_components)
+    elif name == "torus":
+        r = rows or int(np.sqrt(n_agents))
+        assert n_agents % r == 0, "torus requires rows | n_agents"
+        adj = torus_graph(r, n_agents // r)
+    elif name in GRAPHS:
+        adj = GRAPHS[name](n_agents)
+    else:
+        raise ValueError(f"unknown topology {name!r}; options: {sorted(GRAPHS)} + torus")
+    w = WEIGHTINGS[weighting](adj)
+    return Topology(
+        name=name,
+        n_agents=n_agents,
+        w=w,
+        adj=adj,
+        lambda_w=mixing_rate(w),
+        connected=is_connected(adj) if n_agents > 1 else True,
+        shifts=_ring_shifts(w),
+    )

@@ -1,0 +1,158 @@
+"""Host-side training loop driving PISCO or any baseline.
+
+The loop owns exactly the things the paper leaves to "the system":
+
+* the Bernoulli(p) / periodic schedule (line 8 of Algorithm 1),
+* dispatch between the two pre-compiled round functions (gossip vs global),
+* data sampling for the T_o + 1 minibatches each round consumes,
+* communication-cost accounting (agent-to-agent vs agent-to-server rounds),
+* evaluation at the agent-average parameters x̄ (the paper's metrics:
+  running mean of ||∇f(x̄^k)||² and test accuracy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mixing import MixingOps
+from repro.core.pisco import LossFn, PiscoConfig, make_round_fn, init_state
+from repro.core.schedule import CommAccountant, make_schedule
+from repro.core import baselines as B
+
+PyTree = Any
+# sampler(round_idx) -> (local_batches [T_o, A, ...], comm_batch [A, ...])
+Sampler = Callable[[int], tuple]
+# eval_fn(x_bar) -> dict of python floats
+EvalFn = Callable[[PyTree], Dict[str, float]]
+
+
+@dataclasses.dataclass
+class History:
+    """Per-round records, numpy-backed for the benchmark harness."""
+
+    loss: List[float] = dataclasses.field(default_factory=list)
+    grad_sq_norm: List[float] = dataclasses.field(default_factory=list)
+    consensus_err: List[float] = dataclasses.field(default_factory=list)
+    is_global: List[bool] = dataclasses.field(default_factory=list)
+    eval_metrics: List[Dict[str, float]] = dataclasses.field(default_factory=list)
+    accountant: CommAccountant = dataclasses.field(default_factory=CommAccountant)
+    wall_time_s: float = 0.0
+
+    def running_mean_eval(self, key: str) -> np.ndarray:
+        vals = np.array([m[key] for m in self.eval_metrics], dtype=np.float64)
+        return np.cumsum(vals) / (np.arange(len(vals)) + 1)
+
+    def rounds_to_threshold(
+        self, key: str, threshold: float, mode: str = "running_le"
+    ) -> Optional[int]:
+        """First round index where the (running-mean) eval metric crosses the
+        threshold — the paper's Fig. 4 success criterion.  Returns None if
+        never reached."""
+        if not self.eval_metrics:
+            return None
+        if mode == "running_le":
+            series = self.running_mean_eval(key)
+            hits = np.nonzero(series <= threshold)[0]
+        elif mode == "ge":
+            series = np.array([m[key] for m in self.eval_metrics])
+            hits = np.nonzero(series >= threshold)[0]
+        else:
+            raise ValueError(mode)
+        return int(hits[0]) if hits.size else None
+
+
+def make_algorithm_round_fns(
+    algo: str,
+    loss_fn: LossFn,
+    cfg: PiscoConfig,
+    mixing: MixingOps,
+    *,
+    eta: Optional[float] = None,
+    eta_g: float = 1.0,
+) -> tuple:
+    """Return (init_fn, gossip_round_fn, global_round_fn, schedule)."""
+    eta = eta if eta is not None else cfg.eta_l
+    if algo == "pisco":
+        return (
+            lambda lf, x0, b0: init_state(lf, x0, b0),
+            make_round_fn(loss_fn, cfg, mixing, global_round=False),
+            make_round_fn(loss_fn, cfg, mixing, global_round=True),
+            make_schedule(cfg.p, cfg.seed),
+        )
+    if algo == "periodical_gt":
+        fn = B.make_periodical_gt_round_fn(loss_fn, cfg, mixing)
+        return (B.dsgt_init, fn, fn, make_schedule(0.0))
+    if algo == "dsgt":
+        g = B.make_dsgt_round_fn(loss_fn, eta, mixing, global_round=False)
+        s = B.make_dsgt_round_fn(loss_fn, eta, mixing, global_round=True)
+        return (B.dsgt_init, g, s, make_schedule(cfg.p, cfg.seed))
+    if algo == "dsgd":
+        g = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=False, t_o=cfg.t_o)
+        s = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o)
+        return (B.dsgd_init, g, s, make_schedule(0.0))
+    if algo == "gossip_pga":
+        from repro.core.schedule import PeriodicSchedule
+
+        g = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=False, t_o=cfg.t_o)
+        s = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o)
+        period = max(1, int(round(1.0 / cfg.p))) if cfg.p > 0 else 10
+        return (B.dsgd_init, g, s, PeriodicSchedule(period))
+    if algo == "fedavg":
+        s = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o)
+        return (B.dsgd_init, s, s, make_schedule(1.0))
+    if algo == "scaffold":
+        fn = B.make_scaffold_round_fn(loss_fn, cfg.eta_l, eta_g, cfg.t_o, mixing)
+        return (B.scaffold_init, fn, fn, make_schedule(1.0))
+    raise ValueError(f"unknown algorithm {algo!r}; options: {sorted(B.BASELINES)}")
+
+
+def run_training(
+    algo: str,
+    loss_fn: LossFn,
+    x0_stacked: PyTree,
+    cfg: PiscoConfig,
+    mixing: MixingOps,
+    sampler: Sampler,
+    rounds: int,
+    *,
+    eval_fn: Optional[EvalFn] = None,
+    eval_every: int = 1,
+    stop_when: Optional[Callable[[History], bool]] = None,
+    jit: bool = True,
+) -> History:
+    """Drive ``rounds`` communication rounds of ``algo``; returns History."""
+    init_fn, gossip_fn, global_fn, schedule = make_algorithm_round_fns(
+        algo, loss_fn, cfg, mixing
+    )
+    if jit:
+        gossip_fn = jax.jit(gossip_fn)
+        global_fn = jax.jit(global_fn) if global_fn is not gossip_fn else gossip_fn
+
+    local0, comm0 = sampler(-1)
+    state = init_fn(loss_fn, x0_stacked, comm0)
+
+    hist = History()
+    t0 = time.perf_counter()
+    for k in range(rounds):
+        local_batches, comm_batch = sampler(k)
+        is_global = bool(schedule(k))
+        fn = global_fn if is_global else gossip_fn
+        state, metrics = fn(state, local_batches, comm_batch)
+        hist.loss.append(float(metrics.loss))
+        hist.grad_sq_norm.append(float(metrics.grad_sq_norm))
+        hist.consensus_err.append(float(metrics.consensus_err))
+        hist.is_global.append(is_global)
+        hist.accountant.record(is_global)
+        if eval_fn is not None and (k % eval_every == 0 or k == rounds - 1):
+            x_bar = jax.tree.map(lambda v: jnp.mean(v, axis=0), state.x)
+            hist.eval_metrics.append(dict(eval_fn(x_bar), round=k))
+        if stop_when is not None and stop_when(hist):
+            break
+    hist.wall_time_s = time.perf_counter() - t0
+    hist.final_state = state  # type: ignore[attr-defined]
+    return hist

@@ -1,0 +1,23 @@
+from repro.data.synthetic import (
+    synthetic_a9a,
+    synthetic_mnist,
+    synthetic_cifar,
+    synthetic_lm_tokens,
+)
+from repro.data.federated import (
+    partition_sorted,
+    partition_iid,
+    FederatedDataset,
+    RoundSampler,
+)
+
+__all__ = [
+    "synthetic_a9a",
+    "synthetic_mnist",
+    "synthetic_cifar",
+    "synthetic_lm_tokens",
+    "partition_sorted",
+    "partition_iid",
+    "FederatedDataset",
+    "RoundSampler",
+]

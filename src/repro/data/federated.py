@@ -1,0 +1,109 @@
+"""Federated data partitioning + per-round minibatch sampling.
+
+The paper's heterogeneity protocol (§5): *sort the dataset by label and split
+it contiguously* across agents, so each agent sees a disjoint label slice —
+extreme non-IID.  ``partition_iid`` is the shuffled control.
+
+:class:`RoundSampler` produces exactly what one PISCO round consumes
+(Algorithm 1 uses T_o + 1 fresh minibatches per agent per round):
+``local_batches`` with leaves shaped (T_o, n_agents, b, ...) and a
+``comm_batch`` with leaves (n_agents, b, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def partition_sorted(
+    x: np.ndarray, y: np.ndarray, n_agents: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Sort by label, split contiguously: (n_agents, m, ...), (n_agents, m)."""
+    order = np.argsort(y, kind="stable")
+    xs, ys = x[order], y[order]
+    m = len(y) // n_agents
+    xs = xs[: m * n_agents].reshape(n_agents, m, *x.shape[1:])
+    ys = ys[: m * n_agents].reshape(n_agents, m)
+    return xs, ys
+
+
+def partition_iid(
+    x: np.ndarray, y: np.ndarray, n_agents: int, seed: int = 0
+) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(y))
+    xs, ys = x[order], y[order]
+    m = len(y) // n_agents
+    xs = xs[: m * n_agents].reshape(n_agents, m, *x.shape[1:])
+    ys = ys[: m * n_agents].reshape(n_agents, m)
+    return xs, ys
+
+
+@dataclasses.dataclass
+class FederatedDataset:
+    """Agent-partitioned dataset with train/test split."""
+
+    x_train: np.ndarray  # (A, m, ...)
+    y_train: np.ndarray  # (A, m)
+    x_test: np.ndarray  # (N_test, ...)
+    y_test: np.ndarray  # (N_test,)
+
+    @property
+    def n_agents(self) -> int:
+        return self.x_train.shape[0]
+
+    @property
+    def samples_per_agent(self) -> int:
+        return self.x_train.shape[1]
+
+    @classmethod
+    def from_arrays(
+        cls,
+        x: np.ndarray,
+        y: np.ndarray,
+        n_agents: int,
+        *,
+        heterogeneous: bool = True,
+        test_fraction: float = 0.2,
+        seed: int = 0,
+    ) -> "FederatedDataset":
+        rng = np.random.default_rng(seed)
+        order = rng.permutation(len(y))
+        n_test = int(len(y) * test_fraction)
+        test_idx, train_idx = order[:n_test], order[n_test:]
+        part = partition_sorted if heterogeneous else partition_iid
+        if heterogeneous:
+            xs, ys = part(x[train_idx], y[train_idx], n_agents)
+        else:
+            xs, ys = part(x[train_idx], y[train_idx], n_agents, seed=seed)
+        return cls(xs, ys, x[test_idx], y[test_idx])
+
+
+class RoundSampler:
+    """Sampler matching the trainer's contract: sampler(k) ->
+    (local_batches [T_o, A, b, ...], comm_batch [A, b, ...])."""
+
+    def __init__(
+        self, data: FederatedDataset, batch_size: int, t_o: int, seed: int = 0
+    ):
+        self.data = data
+        self.b = batch_size
+        self.t_o = t_o
+        self._rng = np.random.default_rng(seed)
+
+    def __call__(self, round_idx: int):
+        a, m = self.data.n_agents, self.data.samples_per_agent
+        idx = self._rng.integers(0, m, size=(self.t_o + 1, a, self.b))
+        xb = np.take_along_axis(
+            self.data.x_train[None],
+            idx.reshape(self.t_o + 1, a, self.b, *([1] * (self.data.x_train.ndim - 2))),
+            axis=2,
+        )
+        yb = np.take_along_axis(self.data.y_train[None], idx, axis=2)
+        xb, yb = jnp.asarray(xb), jnp.asarray(yb)
+        local = (xb[: self.t_o], yb[: self.t_o])
+        comm = (xb[-1], yb[-1])
+        return local, comm

@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero device allocation (the dry-run pattern).
+
+Batch conventions (matching the PISCO trainer's contract):
+* train:   local_batches leaves (T_o, A, b, ...) + comm_batch leaves (A, b, ...)
+           where A = n_agents, b = global_batch // A.
+* prefill: batch leaves (B, ...) with B = global_batch.
+* decode:  token (B, 1) + cache (from the model bundle's init_cache).
+
+Modality stubs (the one allowed carve-out): audio supplies precomputed frame
+embeddings (B, seq//4, d_model); VLM supplies patch embeddings (B, seq//8,
+d_model) + M-RoPE position ids (3, B, seq).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import InputShape
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _per_agent_batch(cfg: ModelConfig, b: int, seq: int) -> Dict[str, SDS]:
+    """Loss-function batch for ONE agent (leaves (b, ...))."""
+    if cfg.is_enc_dec:
+        return {
+            "frames": SDS((b, seq // 4, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "tokens": SDS((b, seq), jnp.int32),
+        }
+    if cfg.modality == "vlm":
+        n_patch = seq // 8
+        return {
+            "tokens": SDS((b, seq - n_patch), jnp.int32),
+            "prefix_embeds": SDS((b, n_patch, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "positions": SDS((3, b, seq), jnp.int32),
+        }
+    return {"tokens": SDS((b, seq), jnp.int32)}
+
+
+def train_inputs(
+    cfg: ModelConfig, shape: InputShape, n_agents: int, t_o: int
+) -> Tuple[Any, Any]:
+    """(local_batches, comm_batch) ShapeDtypeStruct pytrees."""
+    assert shape.kind == "train"
+    assert shape.global_batch % n_agents == 0, (
+        f"global_batch {shape.global_batch} must divide across {n_agents} agents"
+    )
+    b = shape.global_batch // n_agents
+    per = _per_agent_batch(cfg, b, shape.seq_len)
+    comm = jax.tree.map(lambda s: SDS((n_agents,) + s.shape, s.dtype), per)
+    local = jax.tree.map(lambda s: SDS((t_o,) + s.shape, s.dtype), comm)
+    return local, comm
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, SDS]:
+    assert shape.kind == "prefill"
+    return _per_agent_batch(cfg, shape.global_batch, shape.seq_len)
+
+
+def decode_token_input(shape: InputShape) -> SDS:
+    assert shape.kind == "decode"
+    return SDS((shape.global_batch, 1), jnp.int32)

@@ -1,0 +1,121 @@
+"""PartitionSpec utilities: stacking the agent axis onto model specs and
+sanitizing specs against actual shapes + mesh divisibility.
+
+The model modules declare *intent* (shard heads over "model", d_ff over
+"model", ...); not every architecture dimension divides every mesh axis
+(e.g. Qwen2-VL's 12 heads on a 16-way model axis, Mamba2's 50280 vocab).
+``sanitize_specs`` drops the axis name on any dim the mesh cannot divide —
+replicate rather than fail, and report what was dropped.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def stack_spec_tree(spec_tree: PyTree, agent_axes) -> PyTree:
+    """Prefix every leaf spec with the agent axis (leading stacked dim)."""
+    axes = tuple(agent_axes)
+    entry = axes if len(axes) > 1 else axes[0]
+    return jax.tree.map(
+        lambda s: P(entry, *s), spec_tree, is_leaf=_is_spec
+    )
+
+
+def _axis_product(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        prod = 1
+        for a in entry:
+            prod *= mesh.shape[a]
+        return prod
+    return mesh.shape[entry]
+
+
+def sanitize_specs(
+    spec_tree: PyTree, shape_tree: PyTree, mesh
+) -> Tuple[PyTree, List[str]]:
+    """Drop non-divisible axis entries; returns (fixed_specs, report)."""
+    report: List[str] = []
+
+    def fix(path, spec, shaped):
+        if spec is None:
+            return P()
+        shape = shaped.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        entries = entries[: len(shape)]
+        fixed = []
+        for dim, entry in zip(shape, entries):
+            size = _axis_product(mesh, entry)
+            if entry is not None and dim % size != 0:
+                report.append(
+                    f"{jax.tree_util.keystr(path)}: dim {dim} % {entry}({size}) != 0 -> replicated"
+                )
+                fixed.append(None)
+            else:
+                fixed.append(entry)
+        while fixed and fixed[-1] is None:
+            fixed.pop()
+        return P(*fixed)
+
+    fixed = jax.tree_util.tree_map_with_path(
+        fix, spec_tree, shape_tree, is_leaf=lambda x: _is_spec(x) or x is None
+    )
+    return fixed, report
+
+
+def to_shardings(spec_tree: PyTree, mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=_is_spec
+    )
+
+
+def add_fsdp_axis(
+    spec_tree: PyTree, shape_tree: PyTree, mesh, axis: str = "data",
+    *, skip_leading: int = 0, min_dim: int = 1024,
+) -> PyTree:
+    """Greedy FSDP: shard the first unsharded dim divisible by ``axis`` on
+    every leaf (used by the hierarchical pod-as-agent mode so each agent's
+    replica spreads over the intra-pod data axis instead of replicating)."""
+    size = mesh.shape[axis]
+
+    def fix(spec, shaped):
+        shape = shaped.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        entries = entries[: len(shape)]
+        for i in range(skip_leading, len(shape)):
+            if entries[i] is None and shape[i] >= min_dim and shape[i] % size == 0:
+                entries[i] = axis
+                break
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree.map(
+        fix, spec_tree, shape_tree, is_leaf=lambda x: _is_spec(x) or x is None
+    )
+
+
+def shard_bytes(shape_tree: PyTree, spec_tree: PyTree, mesh) -> int:
+    """Per-device bytes of a sharded pytree (logical, no padding)."""
+    total = 0
+    for shaped, spec in zip(
+        jax.tree.leaves(shape_tree),
+        jax.tree.leaves(spec_tree, is_leaf=_is_spec),
+    ):
+        n = int(np.prod(shaped.shape)) if shaped.shape else 1
+        denom = 1
+        for entry in spec:
+            denom *= _axis_product(mesh, entry)
+        total += (n // max(1, denom)) * shaped.dtype.itemsize
+    return total

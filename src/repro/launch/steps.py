@@ -1,0 +1,394 @@
+"""Builders for the jitted step functions the launcher / dry-run lowers.
+
+Three step kinds per (architecture × mesh):
+
+* ``build_train_steps``  — one full PISCO round (gossip and global variants),
+  agent-stacked params over the agent mesh axes, model-parallel inside.
+* ``build_prefill_step`` — inference prefill (forward + cache fill).
+* ``build_decode_step``  — one-token decode against the KV/SSM cache.
+
+Every builder returns a :class:`StepSpec`: the jitted function plus the
+ShapeDtypeStruct args — ``spec.lower()`` is all the dry-run needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import InputShape
+from repro.core.mixing import (
+    MixingOps,
+    collective_global_mixing,
+    collective_shift_mixing,
+)
+from repro.core.pisco import PiscoConfig, PiscoState, make_round_fn
+from repro.launch import input_specs as I
+from repro.launch.mesh import agent_axes_for, n_agents_for
+from repro.launch.specs import sanitize_specs, stack_spec_tree, to_shardings
+from repro.models.registry import ModelBundle
+
+PyTree = Any
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class StepSpec:
+    name: str
+    fn: Callable  # jitted
+    args: Tuple[Any, ...]  # ShapeDtypeStruct pytrees
+    notes: Dict[str, Any]
+
+    def lower(self):
+        return self.fn.lower(*self.args)
+
+
+# ---------------------------------------------------------------------------
+# Gossip weights on the mesh (circulant; ring over one axis, torus over two)
+# ---------------------------------------------------------------------------
+
+
+def mesh_gossip_shifts(mesh, agent_axes: Sequence[str]) -> Dict[str, list]:
+    """Ring (one agent axis) or torus (two axes) neighbor weights.
+
+    Self weight 1/2; the remaining 1/2 split evenly across distinct neighbor
+    permutations (an axis of size 2 has a single distinct ±1 neighbor)."""
+    axes = list(agent_axes)
+    neigh = []
+    for a in axes:
+        if mesh.shape[a] == 1:
+            continue
+        if mesh.shape[a] == 2:
+            neigh.append((a, [1]))
+        else:
+            neigh.append((a, [1, -1]))
+    total = sum(len(s) for _, s in neigh)
+    shifts: Dict[str, list] = {}
+    w = 0.5 / max(1, total)
+    first = True
+    for a, ss in neigh:
+        pairs = [(s, w) for s in ss]
+        if first:
+            pairs = [(0, 0.5)] + pairs
+            first = False
+        shifts[a] = pairs
+    if not neigh:  # single agent: identity
+        shifts[axes[0]] = [(0, 1.0)]
+    return shifts
+
+
+def gossip_matrix(mesh, agent_axes: Sequence[str], shifts: Dict[str, list]) -> np.ndarray:
+    """Dense equivalent of the circulant mesh gossip (for lambda_w reporting)."""
+    sizes = [mesh.shape[a] for a in agent_axes]
+    n = int(np.prod(sizes))
+    w = np.zeros((n, n))
+    idx = np.arange(n).reshape(sizes)
+    self_w = sum(
+        wt for pairs in shifts.values() for s, wt in pairs if s == 0
+    )
+    w[np.arange(n), np.arange(n)] += self_w
+    for ai, a in enumerate(agent_axes):
+        for s, wt in shifts.get(a, []):
+            if s == 0:
+                continue
+            rolled = np.roll(idx, -s, axis=ai)  # dst receives src shifted by s
+            w[rolled.reshape(-1), idx.reshape(-1)] += wt
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Train steps (one PISCO round)
+# ---------------------------------------------------------------------------
+
+
+def build_train_steps(
+    bundle: ModelBundle,
+    shape: InputShape,
+    mesh,
+    *,
+    t_o: int = 1,
+    eta_l: float = 1e-2,
+    eta_c: float = 1.0,
+    p: float = 0.1,
+    agent_mode: str = "flat",
+    compute_metrics: bool = False,
+    donate: bool = True,
+    wire_dtype: str = "float32",
+) -> Dict[str, StepSpec]:
+    cfg = bundle.cfg
+    agent_axes = agent_axes_for(mesh, agent_mode)
+    n_agents = n_agents_for(mesh, agent_mode)
+    pcfg = PiscoConfig(n_agents=n_agents, t_o=t_o, eta_l=eta_l, eta_c=eta_c, p=p)
+
+    # --- parameter / state shapes & specs -------------------------------
+    params_sds = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    stacked_sds = jax.tree.map(
+        lambda s: SDS((n_agents,) + s.shape, s.dtype), params_sds
+    )
+    inner_specs = bundle.param_specs("model")
+    stacked_specs = stack_spec_tree(inner_specs, agent_axes)
+    if agent_mode == "hierarchical" and "data" in mesh.axis_names:
+        # pod-as-agent: each agent's replica also FSDP-shards over the
+        # intra-pod data axis (axis 0 is the agent stack — skip it)
+        from repro.launch.specs import add_fsdp_axis
+
+        stacked_specs = add_fsdp_axis(
+            stacked_specs, stacked_sds, mesh, "data", skip_leading=1
+        )
+    stacked_specs, dropped = sanitize_specs(stacked_specs, stacked_sds, mesh)
+
+    state_sds = PiscoState(
+        x=stacked_sds, y=stacked_sds, g=stacked_sds, step=SDS((), jnp.int32)
+    )
+    state_specs = PiscoState(
+        x=stacked_specs, y=stacked_specs, g=stacked_specs, step=P()
+    )
+
+    # --- batch shapes & specs -------------------------------------------
+    local_sds, comm_sds = I.train_inputs(cfg, shape, n_agents, t_o)
+    agent_entry = agent_axes if len(agent_axes) > 1 else agent_axes[0]
+    b_per_agent = shape.global_batch // n_agents
+    if agent_mode == "hierarchical" and "data" in mesh.axis_names:
+        # pod-as-agent: the per-agent batch dim additionally shards over the
+        # intra-pod data axis (synchronous DP inside each agent)
+        def _comm_spec(s):
+            if len(s.shape) >= 2 and s.shape[1] == b_per_agent:
+                return P(agent_entry, "data")
+            if len(s.shape) >= 3 and s.shape[2] == b_per_agent:
+                return P(agent_entry, None, "data")
+            return P(agent_entry)
+
+        comm_specs = jax.tree.map(_comm_spec, comm_sds)
+        local_specs = jax.tree.map(
+            lambda s: P(None, *_comm_spec_inner(s, b_per_agent, agent_entry)),
+            local_sds,
+        )
+    else:
+        comm_specs = jax.tree.map(lambda s: P(agent_entry), comm_sds)
+        local_specs = jax.tree.map(lambda s: P(None, agent_entry), local_sds)
+    comm_specs, _dropped_b1 = sanitize_specs(comm_specs, comm_sds, mesh)
+    local_specs, _dropped_b2 = sanitize_specs(local_specs, local_sds, mesh)
+
+    # --- mixing ops over the agent axes ----------------------------------
+    shifts = mesh_gossip_shifts(mesh, agent_axes)
+    gossip_ops = collective_shift_mixing(
+        mesh, agent_axes, stacked_specs, shifts,
+        wire_dtype=None if wire_dtype == "native" else wire_dtype,
+    )
+
+    loss_fn = bundle.loss
+    in_shardings = (
+        to_shardings(state_specs, mesh),
+        to_shardings(local_specs, mesh),
+        to_shardings(comm_specs, mesh),
+    )
+    out_shardings = (
+        to_shardings(state_specs, mesh),
+        None,  # metrics: let XLA place (tiny scalars)
+    )
+    donate_argnums = (0,) if donate else ()
+
+    steps = {}
+    for name, is_global in (("train_gossip", False), ("train_global", True)):
+        round_fn = make_round_fn(
+            loss_fn, pcfg, gossip_ops, global_round=is_global,
+            compute_metrics=compute_metrics,
+        )
+        fn = jax.jit(
+            round_fn,
+            in_shardings=in_shardings,
+            out_shardings=out_shardings,
+            donate_argnums=donate_argnums,
+        )
+        steps[name] = StepSpec(
+            name=name,
+            fn=fn,
+            args=(state_sds, local_sds, comm_sds),
+            notes={
+                "n_agents": n_agents,
+                "agent_axes": agent_axes,
+                "t_o": t_o,
+                "gossip_shifts": {k: list(v) for k, v in shifts.items()},
+                "wire_dtype": wire_dtype,
+                "dropped_shardings": dropped,
+                "lambda_w": _lambda_w(mesh, agent_axes, shifts),
+            },
+        )
+    return steps
+
+
+def _comm_spec_inner(s, b_per_agent, agent_entry):
+    """Spec entries for one local-batch leaf BELOW the leading T_o axis."""
+    inner_shape = s.shape[1:]
+    if len(inner_shape) >= 2 and inner_shape[1] == b_per_agent:
+        return (agent_entry, "data")
+    if len(inner_shape) >= 3 and inner_shape[2] == b_per_agent:
+        return (agent_entry, None, "data")
+    return (agent_entry,)
+
+
+def _lambda_w(mesh, agent_axes, shifts) -> float:
+    from repro.core.topology import mixing_rate
+
+    w = gossip_matrix(mesh, agent_axes, shifts)
+    return float(mixing_rate(w))
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes_entry(mesh, batch: int):
+    """Shard the serving batch over all non-model axes when divisible."""
+    axes = tuple(n for n in mesh.axis_names if n != "model")
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch % size == 0:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def build_prefill_step(
+    bundle: ModelBundle, shape: InputShape, mesh, *, donate: bool = True
+) -> StepSpec:
+    cfg = bundle.cfg
+    batch_sds = I.prefill_inputs(cfg, shape)
+    bsz = shape.global_batch
+    baxes = _batch_axes_entry(mesh, bsz)
+
+    params_sds = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    param_specs, dropped = sanitize_specs(
+        bundle.param_specs("model"), params_sds, mesh
+    )
+    if cfg.is_enc_dec:
+        cache_sds = jax.eval_shape(
+            lambda: bundle.init_cache(bsz, shape.seq_len, mem_len=shape.seq_len // 4)
+        )
+    else:
+        cache_sds = jax.eval_shape(lambda: bundle.init_cache(bsz, shape.seq_len))
+    cache_specs, dropped2 = sanitize_specs(
+        bundle.cache_specs(baxes, "model"), cache_sds, mesh
+    )
+    batch_specs = jax.tree.map(lambda s: P(baxes), batch_sds)
+    # positions for VLM are (3, B, S): batch axis second
+    if "positions" in batch_sds:
+        batch_specs["positions"] = P(None, baxes)
+    batch_specs, dropped3 = sanitize_specs(batch_specs, batch_sds, mesh)
+
+    fn = jax.jit(
+        bundle.prefill,
+        in_shardings=(
+            to_shardings(param_specs, mesh),
+            to_shardings(batch_specs, mesh),
+            to_shardings(cache_specs, mesh),
+        ),
+        out_shardings=None,
+        donate_argnums=(2,) if donate else (),
+    )
+    return StepSpec(
+        name="prefill",
+        fn=fn,
+        args=(params_sds, batch_sds, cache_sds),
+        notes={"batch_axes": baxes, "dropped_shardings": dropped + dropped2 + dropped3},
+    )
+
+
+def _optimize_idle_batch_specs(cache_specs, param_specs, mesh):
+    """§Perf lever for batch-1 decode (long_500k): the non-model axes carry no
+    batch parallelism, so repurpose "data" as (a) sequence parallelism for KV
+    caches, (b) head parallelism for SSM states, (c) expert parallelism for
+    MoE weights.  Key-based rewrite; the sanitizer downstream drops anything
+    non-divisible."""
+    data_axes = tuple(n for n in mesh.axis_names if n != "model")
+    entry = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def rewrite_cache(path, spec):
+        keys = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = keys[-1] if keys else ""
+        n = len(spec)
+        if name in ("k", "v", "c_kv", "k_rope"):
+            # (..., B, S, [H], D): shard the cache SEQUENCE dim over data
+            new = list(spec)
+            seq_pos = n - 3 if name in ("k", "v") else n - 2
+            if 0 <= seq_pos < n:
+                new[seq_pos] = entry
+                return P(*new)
+        if name == "ssm":
+            new = list(spec)
+            if n >= 3:
+                new[n - 3] = entry  # head dim of (B, H, P, N)
+                return P(*new)
+        if name == "conv":
+            new = list(spec)
+            new[n - 1] = ("model",)  # keep channels on model
+            if n >= 1:
+                return P(*new)
+        return spec
+
+    def rewrite_params(path, spec):
+        keys = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        if len(spec) >= 3 and keys and keys[-1] in ("w_up", "w_gate", "w_down"):
+            if "ffn" in keys:  # expert-stacked (…, E, d, f): experts over data
+                new = list(spec)
+                new[len(spec) - 3] = entry
+                return P(*new)
+        return spec
+
+    cache_specs = jax.tree_util.tree_map_with_path(
+        rewrite_cache, cache_specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    param_specs = jax.tree_util.tree_map_with_path(
+        rewrite_params, param_specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    return cache_specs, param_specs
+
+
+def build_decode_step(
+    bundle: ModelBundle, shape: InputShape, mesh, *, donate: bool = True,
+    opt_idle_batch: bool = False,
+) -> StepSpec:
+    cfg = bundle.cfg
+    bsz = shape.global_batch
+    baxes = _batch_axes_entry(mesh, bsz)
+    token_sds = I.decode_token_input(shape)
+
+    params_sds = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    raw_param_specs = bundle.param_specs("model")
+    raw_cache_specs = bundle.cache_specs(baxes, "model")
+    if opt_idle_batch and baxes is None:
+        raw_cache_specs, raw_param_specs = _optimize_idle_batch_specs(
+            raw_cache_specs, raw_param_specs, mesh
+        )
+    param_specs, dropped = sanitize_specs(raw_param_specs, params_sds, mesh)
+    if cfg.is_enc_dec:
+        cache_sds = jax.eval_shape(
+            lambda: bundle.init_cache(bsz, shape.seq_len, mem_len=shape.seq_len // 4)
+        )
+    else:
+        cache_sds = jax.eval_shape(lambda: bundle.init_cache(bsz, shape.seq_len))
+    cache_specs, dropped2 = sanitize_specs(raw_cache_specs, cache_sds, mesh)
+
+    fn = jax.jit(
+        bundle.decode,
+        in_shardings=(
+            to_shardings(param_specs, mesh),
+            NamedSharding(mesh, P(baxes)),
+            to_shardings(cache_specs, mesh),
+        ),
+        out_shardings=None,
+        donate_argnums=(2,) if donate else (),
+    )
+    return StepSpec(
+        name="decode",
+        fn=fn,
+        args=(params_sds, token_sds, cache_sds),
+        notes={
+            "batch_axes": baxes,
+            "opt_idle_batch": opt_idle_batch,
+            "dropped_shardings": dropped + dropped2,
+        },
+    )

@@ -1,0 +1,166 @@
+"""End-to-end PISCO training driver for the LM architectures.
+
+Runs on whatever devices exist (the CPU container trains the reduced configs;
+on a real pod the same code paths drive the production mesh — the step
+functions are the ones the dry-run compiles).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
+        --rounds 50 --t-o 4 --p 0.1 --batch 8 --seq 128
+
+The host loop is the paper's line 8: a Bernoulli(p) draw per round picks the
+pre-compiled gossip or global round function.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.core.mixing import dense_mixing
+from repro.core.pisco import PiscoConfig, init_state, make_round_fn, replicate_params
+from repro.core.schedule import CommAccountant, make_schedule
+from repro.core.topology import make_topology
+from repro.data.synthetic import synthetic_lm_tokens
+from repro.models import get_bundle
+from repro.models.rope import mrope_text_positions
+
+
+def make_lm_sampler(cfg, n_agents: int, batch: int, seq: int, t_o: int, seed: int = 0):
+    """Per-round sampler producing (local_batches, comm_batch) of LM batches.
+
+    Heterogeneity: each agent's token stream uses a different Zipf shuffle —
+    the LM analogue of the paper's sorted-label partition."""
+    streams = [
+        synthetic_lm_tokens(200_000, cfg.vocab_size, seed=seed + 17 * i)
+        for i in range(n_agents)
+    ]
+    rng = np.random.default_rng(seed + 999)
+
+    def batch_for(agent: int, b: int):
+        s = streams[agent]
+        starts = rng.integers(0, len(s) - seq - 1, size=b)
+        toks = np.stack([s[st : st + seq] for st in starts])
+        return toks
+
+    def per_round(_k: int):
+        def stacked(n_sets):
+            toks = np.stack(
+                [
+                    np.stack([batch_for(a, batch) for a in range(n_agents)])
+                    for _ in range(n_sets)
+                ]
+            )  # (n_sets, A, b, seq)
+            return toks
+
+        all_toks = stacked(t_o + 1)
+        extra = {}
+        local = {"tokens": jnp.asarray(all_toks[:t_o]), **extra}
+        comm = {"tokens": jnp.asarray(all_toks[-1]), **extra}
+        if cfg.modality == "vlm":
+            n_patch = max(1, seq // 8)
+            d = cfg.d_model
+            local["prefix_embeds"] = jnp.asarray(
+                rng.normal(size=(t_o, n_agents, batch, n_patch, d)).astype(np.float32)
+            ).astype(jnp.dtype(cfg.dtype))
+            comm["prefix_embeds"] = local["prefix_embeds"][0]
+            pos = np.asarray(mrope_text_positions(batch, seq + n_patch))
+            local["positions"] = jnp.asarray(
+                np.broadcast_to(pos[None, None], (t_o, n_agents) + pos.shape).copy()
+            )
+            comm["positions"] = local["positions"][0]
+        if cfg.is_enc_dec:
+            t_frames = max(1, seq // 4)
+            local["frames"] = jnp.asarray(
+                rng.normal(size=(t_o, n_agents, batch, t_frames, cfg.d_model)).astype(
+                    np.float32
+                )
+            ).astype(jnp.dtype(cfg.dtype))
+            comm["frames"] = local["frames"][0]
+        return local, comm
+
+    return per_round
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--reduced", action="store_true", help="use the smoke-size config")
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--n-agents", type=int, default=4)
+    ap.add_argument("--t-o", type=int, default=2)
+    ap.add_argument("--p", type=float, default=0.1)
+    ap.add_argument("--eta-l", type=float, default=0.05)
+    ap.add_argument("--eta-c", type=float, default=1.0)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    bundle = get_bundle(cfg)
+    pcfg = PiscoConfig(
+        n_agents=args.n_agents, t_o=args.t_o, eta_l=args.eta_l,
+        eta_c=args.eta_c, p=args.p, seed=args.seed,
+    )
+    topo = make_topology(args.topology, args.n_agents)
+    mixing = dense_mixing(topo)
+    print(f"arch={cfg.name} params~{cfg.param_count():,} agents={args.n_agents} "
+          f"topology={args.topology} lambda_w={topo.lambda_w:.4f} p={args.p}")
+
+    sampler = make_lm_sampler(cfg, args.n_agents, args.batch, args.seq, args.t_o, args.seed)
+    key = jax.random.PRNGKey(args.seed)
+    params = bundle.init(key)
+    x0 = replicate_params(params, args.n_agents)
+
+    start_round = 0
+    if args.ckpt_dir:
+        latest = latest_checkpoint(args.ckpt_dir)
+        if latest:
+            start_round, tree = restore_checkpoint(latest)
+            print(f"restored {latest} at round {start_round}")
+
+    gossip_fn = jax.jit(make_round_fn(bundle.loss, pcfg, mixing, global_round=False))
+    global_fn = jax.jit(make_round_fn(bundle.loss, pcfg, mixing, global_round=True))
+    schedule = make_schedule(args.p, args.seed)
+    acct = CommAccountant()
+
+    local0, comm0 = sampler(-1)
+    state = init_state(bundle.loss, x0, comm0)
+    t0 = time.perf_counter()
+    for k in range(start_round, args.rounds):
+        local, comm = sampler(k)
+        is_global = schedule(k)
+        acct.record(is_global)
+        fn = global_fn if is_global else gossip_fn
+        state, metrics = fn(state, local, comm)
+        if k % args.log_every == 0 or k == args.rounds - 1:
+            print(
+                f"round {k:4d} [{'J' if is_global else 'W'}] "
+                f"loss={float(metrics.loss):.4f} "
+                f"|grad|^2={float(metrics.grad_sq_norm):.3e} "
+                f"consensus={float(metrics.consensus_err):.3e}"
+            )
+        if args.ckpt_dir and args.ckpt_every and (k + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, k + 1, state)
+    dt = time.perf_counter() - t0
+    print(
+        f"done: {args.rounds} rounds in {dt:.1f}s "
+        f"({acct.agent_to_agent} gossip, {acct.agent_to_server} server rounds)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

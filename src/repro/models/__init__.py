@@ -1,0 +1,11 @@
+from repro.models.config import MLAConfig, MoEConfig, ModelConfig, SSMConfig
+from repro.models.registry import ModelBundle, get_bundle
+
+__all__ = [
+    "MLAConfig",
+    "MoEConfig",
+    "ModelConfig",
+    "SSMConfig",
+    "ModelBundle",
+    "get_bundle",
+]

@@ -1,0 +1,376 @@
+"""Attention: GQA/MQA (+qk-norm, qkv-bias, sliding-window) and DeepSeek MLA.
+
+Compute paths:
+
+* ``naive``   — full (B, Hkv, G, Sq, Sk) scores; used for short sequences and
+  as the numerical reference.
+* ``chunked`` — unrolled query-block loop with *static* key slices
+  ``k[:, :q_block_end]`` (causal) so long-sequence prefill never materializes
+  the full score matrix and skips the upper triangle entirely.  This is the
+  memory-safe lowering the dry-run uses; the Pallas flash kernel
+  (``repro.kernels.flash_attention``) is the TPU-target equivalent.
+* ``decode``  — single query token against a KV cache (rolling buffer under
+  sliding-window attention, compressed latent cache under MLA).
+
+All variants share one mask convention: scores are masked with -inf *before*
+softmax, softmax in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import KeyGen, dense, normal_init, rms_norm, zeros_init, ones_init
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init + specs
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    s = cfg.init_scale
+    p = {
+        "wq": normal_init(kg(), (d, h, hd), s, dtype),
+        "wk": normal_init(kg(), (d, hkv, hd), s, dtype),
+        "wv": normal_init(kg(), (d, hkv, hd), s, dtype),
+        "wo": normal_init(kg(), (h, hd, d), s / math.sqrt(2 * cfg.n_layers), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((h, hd), dtype)
+        p["bk"] = zeros_init((hkv, hd), dtype)
+        p["bv"] = zeros_init((hkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = ones_init((hd,), dtype)
+        p["k_norm"] = ones_init((hd,), dtype)
+    return p
+
+
+def spec_gqa(cfg: ModelConfig, model_axis: str = "model") -> Dict[str, Any]:
+    mp = model_axis
+    sp = {
+        "wq": P(None, mp, None),
+        "wk": P(None, mp, None) if cfg.n_kv_heads > 1 else P(None, None, None),
+        "wv": P(None, mp, None) if cfg.n_kv_heads > 1 else P(None, None, None),
+        "wo": P(mp, None, None),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = P(mp, None)
+        sp["bk"] = P(mp, None) if cfg.n_kv_heads > 1 else P(None, None)
+        sp["bv"] = P(mp, None) if cfg.n_kv_heads > 1 else P(None, None)
+    if cfg.qk_norm:
+        sp["q_norm"] = P(None)
+        sp["k_norm"] = P(None)
+    return sp
+
+
+def init_mla(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    s = cfg.init_scale
+    q_dim = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq": normal_init(kg(), (d, h, q_dim), s, dtype),
+        "w_dkv": normal_init(kg(), (d, m.kv_lora_rank), s, dtype),
+        "w_kr": normal_init(kg(), (d, m.rope_head_dim), s, dtype),
+        "kv_norm": ones_init((m.kv_lora_rank,), dtype),
+        "w_uk": normal_init(kg(), (m.kv_lora_rank, h, m.nope_head_dim), s, dtype),
+        "w_uv": normal_init(kg(), (m.kv_lora_rank, h, m.v_head_dim), s, dtype),
+        "wo": normal_init(
+            kg(), (h, m.v_head_dim, d), s / math.sqrt(2 * cfg.n_layers), dtype
+        ),
+    }
+
+
+def spec_mla(cfg: ModelConfig, model_axis: str = "model") -> Dict[str, Any]:
+    mp = model_axis
+    return {
+        "wq": P(None, mp, None),
+        "w_dkv": P(None, None),
+        "w_kr": P(None, None),
+        "kv_norm": P(None),
+        "w_uk": P(None, mp, None),
+        "w_uv": P(None, mp, None),
+        "wo": P(mp, None, None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Score/softmax cores
+# ---------------------------------------------------------------------------
+
+
+def _softcap(scores: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def _sdpa(
+    q: jnp.ndarray,  # (B, Sq, Hkv, G, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, Dv)
+    mask: Optional[jnp.ndarray],  # broadcastable to (B, Hkv, G, Sq, Sk) or None
+    softcap: Optional[float],
+) -> jnp.ndarray:
+    """Grouped scaled-dot-product attention; returns (B, Sq, Hkv, G, Dv)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k) * scale
+    scores = _softcap(scores, softcap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+
+def _causal_mask(sq: int, sk: int, q_offset: int, window: Optional[int]):
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    return mask[None, None, None]  # (1,1,1,Sq,Sk)
+
+
+def attention_core(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill). Returns (B, Sq, H, Dv)."""
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+
+    if sq <= chunk or not causal or sq % chunk != 0:
+        # naive path (short sequences / non-causal / ragged lengths)
+        mask = _causal_mask(sq, k.shape[1], 0, window) if causal else None
+        out = _sdpa(qg, k, v, mask, softcap)
+        return out.reshape(b, sq, h, -1)
+
+    # Chunked causal path: static key slices, upper triangle never computed.
+    outs = []
+    for ci in range(sq // chunk):
+        q_start = ci * chunk
+        k_end = q_start + chunk
+        k_start = 0 if window is None else max(0, k_end - window - chunk)
+        qc = qg[:, q_start : q_start + chunk]
+        kc = k[:, k_start:k_end]
+        vc = v[:, k_start:k_end]
+        mask = _causal_mask(chunk, k_end - k_start, q_start - k_start, window)
+        outs.append(_sdpa(qc, kc, vc, mask, softcap))
+    return jnp.concatenate(outs, axis=1).reshape(b, sq, h, -1)
+
+
+def decode_attention_core(
+    q: jnp.ndarray,  # (B, 1, H, D)
+    k_cache: jnp.ndarray,  # (B, S_cache, Hkv, D)
+    v_cache: jnp.ndarray,  # (B, S_cache, Hkv, Dv)
+    valid: jnp.ndarray,  # (B, S_cache) bool — which cache slots are live
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    b, _, h, dh = q.shape
+    hkv = k_cache.shape[2]
+    qg = q.reshape(b, 1, hkv, h // hkv, dh)
+    mask = valid[:, None, None, None, :]  # (B,1,1,1,S)
+    out = _sdpa(qg, k_cache, v_cache, mask, softcap)
+    return out.reshape(b, 1, h, -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA block forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(params, cfg: ModelConfig, x, x_kv=None):
+    xkv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_forward(
+    params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, S, d)
+    cos_sin: Optional[Tuple[jnp.ndarray, jnp.ndarray]],
+    *,
+    causal: bool = True,
+    x_kv: Optional[jnp.ndarray] = None,  # cross-attention memory
+    cos_sin_kv: Optional[Tuple] = None,
+) -> jnp.ndarray:
+    q, k, v = _project_qkv(params, cfg, x, x_kv)
+    if cos_sin is not None:
+        q = apply_rope(q, *cos_sin)
+        k = apply_rope(k, *(cos_sin_kv if cos_sin_kv is not None else cos_sin))
+    out = attention_core(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=cfg.sliding_window,
+        chunk=cfg.attn_chunk,
+        softcap=cfg.attn_logit_softcap,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict:
+    """KV cache; rolling buffer of size `window` under SWA."""
+    size = max_seq if cfg.sliding_window is None else min(max_seq, cfg.sliding_window)
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def spec_gqa_cache(cfg: ModelConfig, batch_axes, model_axis="model") -> Dict:
+    kv = P(batch_axes, None, model_axis if cfg.n_kv_heads > 1 else None, None)
+    return {"k": kv, "v": kv}
+
+
+def gqa_fill_cache(cache: Dict, k: jnp.ndarray, v: jnp.ndarray) -> Dict:
+    """Write prefill K/V into the cache (rolling tail under SWA)."""
+    size = cache["k"].shape[1]
+    s = k.shape[1]
+    if s >= size:
+        return {"k": k[:, s - size :], "v": v[:, s - size :]}
+    return {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+    }
+
+
+def gqa_decode(
+    params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, 1, d)
+    cos_sin: Tuple[jnp.ndarray, jnp.ndarray],  # tables for position `pos`
+    cache: Dict,
+    pos: jnp.ndarray,  # scalar int32 — number of tokens already in context
+) -> Tuple[jnp.ndarray, Dict]:
+    q, k, v = _project_qkv(params, cfg, x)
+    if cos_sin is not None:
+        q = apply_rope(q, *cos_sin)
+        k = apply_rope(k, *cos_sin)
+    size = cache["k"].shape[1]
+    slot = pos % size if cfg.sliding_window is not None else pos
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    idx = jnp.arange(size)
+    if cfg.sliding_window is None:
+        valid = idx <= pos
+    else:
+        valid = (idx <= pos) | (pos >= size)  # rolling buffer fully valid once wrapped
+    valid = jnp.broadcast_to(valid[None], (x.shape[0], size))
+    out = decode_attention_core(q, k_cache, v_cache, valid, cfg.attn_logit_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA forward (train/prefill materialized; decode absorbed)
+# ---------------------------------------------------------------------------
+
+
+def _mla_qkr(params, cfg, x, cos_sin):
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope = q[..., : m.nope_head_dim]
+    q_rope = apply_rope(q[..., m.nope_head_dim :], *cos_sin)
+    c_kv = rms_norm(
+        jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]), params["kv_norm"], cfg.norm_eps
+    )
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["w_kr"])[:, :, None, :], *cos_sin
+    )[:, :, 0]  # (B, S, rope_dim), single shared head
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(params, cfg: ModelConfig, x, cos_sin, *, causal=True) -> jnp.ndarray:
+    """Materialized MLA (train / prefill): up-project the latent to full K/V."""
+    m = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(params, cfg, x, cos_sin)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+    value = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"])
+    h = cfg.n_heads
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (m.rope_head_dim,))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    out = attention_core(
+        q, k, value, causal=causal, window=None, chunk=cfg.attn_chunk,
+        softcap=cfg.attn_logit_softcap,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, m.rope_head_dim), dtype),
+    }
+
+
+def spec_mla_cache(cfg: ModelConfig, batch_axes, model_axis="model") -> Dict:
+    return {"c_kv": P(batch_axes, None, None), "k_rope": P(batch_axes, None, None)}
+
+
+def mla_fill_cache(cache: Dict, c_kv: jnp.ndarray, k_rope: jnp.ndarray) -> Dict:
+    return {
+        "c_kv": jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, 0, 0)),
+        "k_rope": jax.lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, 0, 0)),
+    }
+
+
+def mla_decode(
+    params, cfg: ModelConfig, x, cos_sin, cache: Dict, pos
+) -> Tuple[jnp.ndarray, Dict]:
+    """Absorbed-matrix MLA decode: attention runs in the compressed latent
+    space (MQA-shaped), W_uk folded into the query and W_uv applied after the
+    value reduction — the DeepSeek-V2 production decode path."""
+    m = cfg.mla
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkr(params, cfg, x, cos_sin)
+    c_cache = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new, (0, pos, 0))
+    r_cache = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, pos, 0))
+    # Absorb: q_lat[b,1,h,r] = q_nope · W_uk
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"])
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_lat, c_cache)
+        + jnp.einsum("bshr,btr->bhst", q_rope, r_cache)
+    ) * scale
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    size = c_cache.shape[1]
+    valid = (jnp.arange(size) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, c_cache)  # latent-space context
+    out = jnp.einsum("bshr,rhk->bshk", ctx, params["w_uv"])
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"c_kv": c_cache, "k_rope": r_cache}

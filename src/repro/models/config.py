@@ -1,0 +1,218 @@
+"""Model configuration for the composable model zoo.
+
+One :class:`ModelConfig` covers every assigned architecture family:
+dense GQA/MQA decoders, MoE (Mixtral / DeepSeek-MLA), SSM (Mamba2 SSD),
+hybrid (Jamba), encoder-decoder (Seamless, stub audio frontend) and VLM
+(Qwen2-VL, stub vision frontend, M-RoPE).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int  # routed experts
+    top_k: int
+    d_expert: int  # per-expert FFN hidden size
+    n_shared: int = 0  # shared (always-on) experts, DeepSeek-style
+    # which layers are MoE: "all" | "every_2" (odd layers) | "after_first"
+    layer_mode: str = "all"
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+    # router weight normalization: "softmax_topk" (Mixtral: softmax over the
+    # selected logits) | "topk_softmax" (DeepSeek: softmax first, renormalize)
+    gate_mode: str = "softmax_topk"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64  # SSD "P"
+    n_groups: int = 1
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+    a_init_range: Tuple[float, float] = (1.0, 16.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2)."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0  # 0 => direct q projection (V2-Lite)
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    # --- attention variants ---
+    attn_impl: str = "gqa"  # gqa | mla | none (pure SSM)
+    qk_norm: bool = False  # Qwen3
+    qkv_bias: bool = False  # Qwen2.5 / Qwen2-VL
+    sliding_window: Optional[int] = None  # Mixtral SWA
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # Qwen2-VL M-RoPE
+    attn_logit_softcap: Optional[float] = None
+    # --- feed-forward variant ---
+    mlp_type: str = "swiglu"  # swiglu | squared_relu | gelu
+    # --- sub-configs ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    mla: Optional[MLAConfig] = None
+    # --- hybrid layout (Jamba): mixer per layer within a period ---
+    # e.g. ("mamba","mamba","mamba","attn","mamba","mamba","mamba","mamba")
+    hybrid_period: Optional[Tuple[str, ...]] = None
+    first_k_dense: int = 0  # DeepSeek: first k layers use dense FFN, not MoE
+    # --- encoder-decoder (Seamless) ---
+    is_enc_dec: bool = False
+    n_encoder_layers: int = 0
+    # --- modality frontend stubs ---
+    modality: str = "text"  # text | audio | vlm
+    # --- numerics / implementation ---
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "float32"  # parameter/compute dtype ("bfloat16" for dry-run)
+    attn_chunk: int = 1024  # online-softmax q-block size for long sequences
+    remat: bool = True  # rematerialize each scanned layer in training
+    remat_policy: str = "full"  # full | dots (save matmul outputs, recompute rest)
+    loss_chunk: int = 0  # >0: compute CE over sequence chunks (never
+    #     materializes the full (B, S, V) logits — §Perf lever)
+    scan_unroll: bool = False  # fully unroll the layer scan (used by the
+    #     dry-run cost-correction variants: XLA cost analysis counts while
+    #     bodies once, so scanned stacks need unrolled small variants)
+    init_scale: float = 0.02
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.n_heads
+
+    @property
+    def q_group(self) -> int:
+        return max(1, self.n_heads // max(1, self.n_kv_heads))
+
+    def layer_kinds(self) -> List[str]:
+        """Mixer kind per decoder layer ('attn' | 'mamba')."""
+        if self.hybrid_period:
+            period = list(self.hybrid_period)
+            assert self.n_layers % len(period) == 0
+            return period * (self.n_layers // len(period))
+        if self.arch_type == "ssm":
+            return ["mamba"] * self.n_layers
+        return ["attn"] * self.n_layers
+
+    def ffn_kinds(self) -> List[str]:
+        """FFN kind per decoder layer ('dense' | 'moe' | 'none')."""
+        if self.arch_type == "ssm":
+            return ["none"] * self.n_layers  # Mamba2 block subsumes the FFN
+        if self.moe is None:
+            return ["dense"] * self.n_layers
+        mode = self.moe.layer_mode
+        kinds = []
+        for l in range(self.n_layers):
+            if mode == "all":
+                kinds.append("moe")
+            elif mode == "every_2":
+                kinds.append("moe" if l % 2 == 1 else "dense")
+            elif mode == "after_first":
+                kinds.append("dense" if l < self.first_k_dense else "moe")
+            else:
+                raise ValueError(mode)
+        return kinds
+
+    def scan_period(self) -> int:
+        """Length of the repeating layer pattern (the scan unit)."""
+        body = self.n_layers - self.first_k_dense
+        if self.hybrid_period:
+            p = len(self.hybrid_period)
+            if self.moe is not None and self.moe.layer_mode == "every_2":
+                p = max(p, 2) if p % 2 == 0 else p * 2
+            assert body % p == 0
+            return p
+        if self.moe is not None and self.moe.layer_mode == "every_2":
+            assert body % 2 == 0
+            return 2
+        return 1
+
+    def supports_long_decode(self) -> bool:
+        """Sub-quadratic / bounded-cache decode => long_500k applies."""
+        if self.arch_type in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window is not None
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included, biases ignored)."""
+        d, f, V = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        n_attn = 0
+        n_mamba = 0
+        for kind in self.layer_kinds():
+            if kind == "attn":
+                if self.attn_impl == "mla":
+                    m = self.mla
+                    qd = self.n_heads * (m.nope_head_dim + m.rope_head_dim)
+                    n_attn += d * qd  # q proj
+                    n_attn += d * (m.kv_lora_rank + m.rope_head_dim)  # down
+                    n_attn += m.kv_lora_rank * self.n_heads * (
+                        m.nope_head_dim + m.v_head_dim
+                    )  # up
+                    n_attn += self.n_heads * m.v_head_dim * d  # out
+                else:
+                    n_attn += d * self.n_heads * hd  # q
+                    n_attn += 2 * d * self.n_kv_heads * hd  # k, v
+                    n_attn += self.n_heads * hd * d  # o
+            else:  # mamba
+                s = self.ssm
+                d_in = s.expand * d
+                n_mamba += d * (2 * d_in + 2 * s.n_groups * s.d_state + d_in // s.head_dim)
+                n_mamba += s.d_conv * (d_in + 2 * s.n_groups * s.d_state)
+                n_mamba += d_in * d  # out proj
+        n_ffn = 0
+        for kind in self.ffn_kinds():
+            if kind == "dense":
+                mult = 3 if self.mlp_type == "swiglu" else 2
+                n_ffn += mult * d * f
+            elif kind == "moe":
+                mo = self.moe
+                mult = 3 if self.mlp_type == "swiglu" else 2
+                n_ffn += mo.n_experts * mult * d * mo.d_expert
+                n_ffn += mo.n_shared * mult * d * mo.d_expert
+                n_ffn += d * mo.n_experts  # router
+        n_embed = V * d * (1 if self.tie_embeddings else 2)
+        n_enc = 0
+        if self.is_enc_dec:
+            # encoder self-attn + ffn + decoder cross-attn
+            per_enc = 4 * d * self.n_heads * hd + 3 * d * f
+            n_enc += self.n_encoder_layers * per_enc
+            n_enc += self.n_layers * 4 * d * self.n_heads * hd  # cross-attn
+        return n_attn + n_mamba + n_ffn + n_embed + n_enc
+
+    def active_param_count(self) -> int:
+        """Active (per-token) parameters — MoE counts top_k + shared only."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        mo = self.moe
+        mult = 3 if self.mlp_type == "swiglu" else 2
+        per_expert = mult * self.d_model * mo.d_expert
+        n_moe_layers = sum(1 for k in self.ffn_kinds() if k == "moe")
+        inactive = n_moe_layers * (mo.n_experts - mo.top_k) * per_expert
+        return full - inactive

@@ -1,0 +1,225 @@
+"""Encoder-decoder transformer (Seamless-M4T text/speech backbone).
+
+Per the assignment carve-out, the audio frontend (mel + conv feature
+extractor) is a stub: the encoder consumes precomputed frame embeddings
+``(B, T_frames, d_model)`` supplied by ``input_specs()``.  We implement the
+transformer backbone: a bidirectional encoder stack and a causal decoder with
+cross-attention, including the cached decode path (self-attn KV cache +
+static encoder memory).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models.config import ModelConfig
+from repro.models.layers import KeyGen, init_rms_norm, normal_init, rms_norm, spec_rms_norm
+from repro.models.mlp import init_mlp, mlp_forward, spec_mlp
+from repro.models.rope import rope_cos_sin, text_positions
+
+PyTree = Any
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _init_enc_layer(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    return {
+        "norm1": init_rms_norm(cfg.d_model, dtype),
+        "attn": A.init_gqa(kg, cfg, dtype),
+        "norm2": init_rms_norm(cfg.d_model, dtype),
+        "ffn": init_mlp(kg, cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.init_scale, dtype),
+    }
+
+
+def _init_dec_layer(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    return {
+        "norm1": init_rms_norm(cfg.d_model, dtype),
+        "self_attn": A.init_gqa(kg, cfg, dtype),
+        "norm_x": init_rms_norm(cfg.d_model, dtype),
+        "cross_attn": A.init_gqa(kg, cfg, dtype),
+        "norm2": init_rms_norm(cfg.d_model, dtype),
+        "ffn": init_mlp(kg, cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.init_scale, dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> PyTree:
+    dtype = _dtype(cfg)
+    kg = KeyGen(key)
+    enc = [_init_enc_layer(kg, cfg, dtype) for _ in range(cfg.n_encoder_layers)]
+    dec = [_init_dec_layer(kg, cfg, dtype) for _ in range(cfg.n_layers)]
+    return {
+        "embed": normal_init(kg(), (cfg.vocab_size, cfg.d_model), cfg.init_scale, dtype),
+        "enc_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "enc_norm": init_rms_norm(cfg.d_model, dtype),
+        "dec_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "final_norm": init_rms_norm(cfg.d_model, dtype),
+        "lm_head": normal_init(kg(), (cfg.d_model, cfg.vocab_size), cfg.init_scale, dtype),
+    }
+
+
+def encdec_param_specs(cfg: ModelConfig, model_axis: str = "model") -> PyTree:
+    def stacked(sp):
+        return jax.tree.map(lambda s: P(None, *s), sp, is_leaf=lambda s: isinstance(s, P))
+
+    enc_sp = {
+        "norm1": spec_rms_norm(),
+        "attn": A.spec_gqa(cfg, model_axis),
+        "norm2": spec_rms_norm(),
+        "ffn": spec_mlp(cfg.mlp_type, model_axis),
+    }
+    dec_sp = {
+        "norm1": spec_rms_norm(),
+        "self_attn": A.spec_gqa(cfg, model_axis),
+        "norm_x": spec_rms_norm(),
+        "cross_attn": A.spec_gqa(cfg, model_axis),
+        "norm2": spec_rms_norm(),
+        "ffn": spec_mlp(cfg.mlp_type, model_axis),
+    }
+    return {
+        "embed": P(model_axis, None),
+        "enc_layers": stacked(enc_sp),
+        "enc_norm": spec_rms_norm(),
+        "dec_layers": stacked(dec_sp),
+        "final_norm": spec_rms_norm(),
+        "lm_head": P(None, model_axis),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def encode(params: PyTree, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, T, d_model) stub frontend output -> encoder memory."""
+    b, t, _ = frames.shape
+    cos_sin = rope_cos_sin(
+        text_positions(b, t), cfg.resolved_head_dim, cfg.rope_theta
+    )
+
+    def layer(x, lp):
+        h = rms_norm(x, lp["norm1"]["scale"], cfg.norm_eps)
+        x = x + A.gqa_forward(lp["attn"], cfg, h, cos_sin, causal=False)
+        h = rms_norm(x, lp["norm2"]["scale"], cfg.norm_eps)
+        x = x + mlp_forward(lp["ffn"], cfg.mlp_type, h)
+        return x, None
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = jax.lax.scan(body, frames.astype(_dtype(cfg)), params["enc_layers"], unroll=cfg.scan_unroll or 1)
+    return rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+def _dec_layer(lp, cfg, x, memory, cos_sin, mem_cos_sin):
+    h = rms_norm(x, lp["norm1"]["scale"], cfg.norm_eps)
+    x = x + A.gqa_forward(lp["self_attn"], cfg, h, cos_sin, causal=True)
+    h = rms_norm(x, lp["norm_x"]["scale"], cfg.norm_eps)
+    x = x + A.gqa_forward(
+        lp["cross_attn"], cfg, h, cos_sin, causal=False, x_kv=memory,
+        cos_sin_kv=mem_cos_sin,
+    )
+    h = rms_norm(x, lp["norm2"]["scale"], cfg.norm_eps)
+    x = x + mlp_forward(lp["ffn"], cfg.mlp_type, h)
+    return x
+
+
+def decode_train(
+    params: PyTree, cfg: ModelConfig, tokens: jnp.ndarray, memory: jnp.ndarray
+) -> jnp.ndarray:
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    cos_sin = rope_cos_sin(text_positions(b, s), cfg.resolved_head_dim, cfg.rope_theta)
+    mem_cos_sin = rope_cos_sin(
+        text_positions(b, memory.shape[1]), cfg.resolved_head_dim, cfg.rope_theta
+    )
+
+    def layer(xx, lp):
+        return _dec_layer(lp, cfg, xx, memory, cos_sin, mem_cos_sin), None
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = jax.lax.scan(body, x, params["dec_layers"], unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return x @ params["lm_head"]
+
+
+def encdec_loss(params: PyTree, cfg: ModelConfig, batch: Dict) -> jnp.ndarray:
+    """batch: {"frames": (B,T,d), "tokens": (B,S)}."""
+    memory = encode(params, cfg, batch["frames"])
+    logits = decode_train(params, cfg, batch["tokens"], memory)
+    pred = logits[:, :-1].astype(jnp.float32)
+    tgt = batch["tokens"][:, 1:]
+    logz = jax.nn.logsumexp(pred, axis=-1)
+    gold = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Cached decode
+# ---------------------------------------------------------------------------
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_seq: int, mem_len: int) -> Dict:
+    dtype = _dtype(cfg)
+    one = A.init_gqa_cache(cfg, batch, max_seq, dtype)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one
+    )
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "self_kv": stacked,
+        "memory": jnp.zeros((batch, mem_len, cfg.d_model), dtype),
+    }
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch_axes, model_axis="model") -> Dict:
+    kv = A.spec_gqa_cache(cfg, batch_axes, model_axis)
+    return {
+        "pos": P(),
+        "self_kv": jax.tree.map(
+            lambda s: P(None, *s), kv, is_leaf=lambda s: isinstance(s, P)
+        ),
+        "memory": P(batch_axes, None, None),
+    }
+
+
+def encdec_decode_step(
+    params: PyTree, cfg: ModelConfig, token: jnp.ndarray, cache: Dict
+) -> Tuple[jnp.ndarray, Dict]:
+    pos = cache["pos"]
+    memory = cache["memory"]
+    b = token.shape[0]
+    x = params["embed"][token]
+    hd = cfg.resolved_head_dim
+    cos_sin = rope_cos_sin(text_positions(b, 1, pos), hd, cfg.rope_theta)
+    mem_cos_sin = rope_cos_sin(
+        text_positions(b, memory.shape[1]), hd, cfg.rope_theta
+    )
+
+    def layer(xx, scanned):
+        lp, cc = scanned
+        h = rms_norm(xx, lp["norm1"]["scale"], cfg.norm_eps)
+        h_attn, cc = A.gqa_decode(lp["self_attn"], cfg, h, cos_sin, cc, pos)
+        xx = xx + h_attn
+        h = rms_norm(xx, lp["norm_x"]["scale"], cfg.norm_eps)
+        xx = xx + A.gqa_forward(
+            lp["cross_attn"], cfg, h, cos_sin, causal=False, x_kv=memory,
+            cos_sin_kv=mem_cos_sin,
+        )
+        h = rms_norm(xx, lp["norm2"]["scale"], cfg.norm_eps)
+        xx = xx + mlp_forward(lp["ffn"], cfg.mlp_type, h)
+        return xx, cc
+
+    x, new_kv = jax.lax.scan(layer, x, (params["dec_layers"], cache["self_kv"]), unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, {"pos": pos + 1, "self_kv": new_kv, "memory": memory}

@@ -1,0 +1,59 @@
+"""Shared primitive layers: norms, initializers, linear helpers.
+
+Parameters are plain nested dicts of jnp arrays; every module exposes
+``init_*`` (params), a forward function, and ``spec_*`` (a PartitionSpec tree
+with the same structure, used by the launcher for pjit shardings).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def normal_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def zeros_init(shape, dtype) -> jnp.ndarray:
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def ones_init(shape, dtype) -> jnp.ndarray:
+    return jnp.ones(shape, dtype=dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """RMSNorm in fp32 with cast back (the production-standard recipe)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype) -> dict:
+    return {"scale": ones_init((d,), dtype)}
+
+
+def spec_rms_norm() -> dict:
+    return {"scale": P(None)}
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray] = None):
+    y = x @ w
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+class KeyGen:
+    """Split-on-demand PRNG key stream for sequential init code."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub

@@ -1,0 +1,45 @@
+"""Feed-forward blocks: SwiGLU (Llama-family), squared-ReLU (Nemotron-4),
+GELU (Seamless)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import KeyGen, normal_init
+
+
+def init_mlp(kg: KeyGen, d: int, f: int, mlp_type: str, scale: float, dtype) -> Dict:
+    if mlp_type == "swiglu":
+        return {
+            "w_gate": normal_init(kg(), (d, f), scale, dtype),
+            "w_up": normal_init(kg(), (d, f), scale, dtype),
+            "w_down": normal_init(kg(), (f, d), scale, dtype),
+        }
+    # squared_relu / gelu: two matrices
+    return {
+        "w_up": normal_init(kg(), (d, f), scale, dtype),
+        "w_down": normal_init(kg(), (f, d), scale, dtype),
+    }
+
+
+def spec_mlp(mlp_type: str, model_axis: str = "model") -> Dict:
+    mp = model_axis
+    if mlp_type == "swiglu":
+        return {"w_gate": P(None, mp), "w_up": P(None, mp), "w_down": P(mp, None)}
+    return {"w_up": P(None, mp), "w_down": P(mp, None)}
+
+
+def mlp_forward(params: Dict, mlp_type: str, x: jnp.ndarray) -> jnp.ndarray:
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"])
+    else:
+        raise ValueError(f"unknown mlp_type {mlp_type!r}")
+    return h @ params["w_down"]

@@ -1,0 +1,144 @@
+"""Mixture-of-Experts: sort-based capacity dispatch (dropless up to the
+capacity factor) + optional DeepSeek-style shared experts.
+
+Why sort-based: the dry-run shapes push up to 1M tokens through a layer; a
+one-hot dispatch tensor (T, E, C) would be astronomically large, while the
+sort-based path is O(T·top_k) memory and lowers to gather/scatter + one
+batched (E, C, d) × (E, d, f) einsum — which is also what a TPU expert-
+parallel layout wants (the einsum's E axis shards; tokens move via the same
+gather/scatter pattern an all-to-all would implement).
+
+Router math follows the configured ``gate_mode``:
+* ``softmax_topk`` (Mixtral): softmax over the top-k *logits*.
+* ``topk_softmax`` (DeepSeek): softmax over all experts, keep top-k, renorm.
+
+The load-balance auxiliary loss is the standard Switch/Mixtral form:
+``E * sum_e f_e * p_e`` with f = token fraction, p = mean router prob.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.layers import KeyGen, normal_init
+from repro.models.mlp import init_mlp, mlp_forward, spec_mlp
+
+
+def init_moe(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    mo = cfg.moe
+    d, fe = cfg.d_model, mo.d_expert
+    s = cfg.init_scale
+    mult3 = cfg.mlp_type == "swiglu"
+    p: Dict[str, Any] = {
+        "router": normal_init(kg(), (d, mo.n_experts), s, jnp.float32),
+    }
+    if mult3:
+        p["w_gate"] = normal_init(kg(), (mo.n_experts, d, fe), s, dtype)
+        p["w_up"] = normal_init(kg(), (mo.n_experts, d, fe), s, dtype)
+        p["w_down"] = normal_init(kg(), (mo.n_experts, fe, d), s, dtype)
+    else:
+        p["w_up"] = normal_init(kg(), (mo.n_experts, d, fe), s, dtype)
+        p["w_down"] = normal_init(kg(), (mo.n_experts, fe, d), s, dtype)
+    if mo.n_shared:
+        p["shared"] = init_mlp(kg, d, mo.n_shared * fe, cfg.mlp_type, s, dtype)
+    return p
+
+
+def spec_moe(cfg: ModelConfig, model_axis: str = "model") -> Dict[str, Any]:
+    mo = cfg.moe
+    mp = model_axis
+    # Experts' hidden dim shards over the model axis (tensor-parallel experts);
+    # the expert axis itself is sharded instead when E % mesh == 0 (the
+    # launcher's sanitizer keeps whichever is divisible — see launch/specs).
+    sp: Dict[str, Any] = {"router": P(None, None)}
+    if cfg.mlp_type == "swiglu":
+        sp["w_gate"] = P(None, None, mp)
+        sp["w_up"] = P(None, None, mp)
+        sp["w_down"] = P(None, mp, None)
+    else:
+        sp["w_up"] = P(None, None, mp)
+        sp["w_down"] = P(None, mp, None)
+    if mo.n_shared:
+        sp["shared"] = spec_mlp(cfg.mlp_type, model_axis)
+    return sp
+
+
+def _route(
+    logits: jnp.ndarray, mo: MoEConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Return (topk_idx (T,k), topk_weight (T,k), probs (T,E))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if mo.gate_mode == "softmax_topk":
+        top_logit, top_idx = jax.lax.top_k(logits, mo.top_k)
+        top_w = jax.nn.softmax(top_logit.astype(jnp.float32), axis=-1)
+    elif mo.gate_mode == "topk_softmax":
+        top_p, top_idx = jax.lax.top_k(probs, mo.top_k)
+        top_w = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    else:
+        raise ValueError(mo.gate_mode)
+    return top_idx, top_w, probs
+
+
+def aux_load_balance_loss(probs: jnp.ndarray, top_idx: jnp.ndarray, mo: MoEConfig):
+    e = mo.n_experts
+    counts = jnp.zeros((e,), jnp.float32).at[top_idx.reshape(-1)].add(1.0)
+    frac = counts / (top_idx.shape[0] * mo.top_k)
+    mean_p = jnp.mean(probs, axis=0)
+    return e * jnp.sum(frac * mean_p) * mo.router_aux_coef
+
+
+def moe_forward(
+    params: Dict, cfg: ModelConfig, x: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = xf.astype(jnp.float32) @ params["router"]
+    top_idx, top_w, probs = _route(logits, mo)
+    aux = aux_load_balance_loss(probs, top_idx, mo)
+
+    # ---- sort-based capacity dispatch -------------------------------------
+    k = mo.top_k
+    cap = int(mo.capacity_factor * t * k / mo.n_experts)
+    cap = max(1, min(cap, t * k))
+    flat_expert = top_idx.reshape(-1)  # (T*k,)
+    flat_weight = top_w.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_expert)  # stable sort: tokens grouped by expert
+    counts = jnp.zeros((mo.n_experts,), jnp.int32).at[flat_expert].add(1)
+    offsets = jnp.cumsum(counts) - counts  # exclusive prefix
+    # (E, C) gather positions into `order`, padded past each expert's count
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    gather_pos = offsets[:, None] + slot[None, :]
+    in_range = slot[None, :] < jnp.minimum(counts[:, None], cap)
+    gather_pos = jnp.clip(gather_pos, 0, t * k - 1)
+    src = order[gather_pos]  # (E, C) indices into the flattened (T*k) stream
+    tok = src // k  # source token ids
+    x_exp = xf[tok] * in_range[..., None].astype(xf.dtype)  # (E, C, d)
+
+    # ---- expert FFN as one batched einsum ---------------------------------
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_exp, params["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", x_exp, params["w_up"])
+    elif cfg.mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", x_exp, params["w_up"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x_exp, params["w_up"]))
+    y_exp = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, C, d)
+
+    # ---- combine: weighted scatter-add back to tokens ----------------------
+    w = flat_weight[src] * in_range.astype(jnp.float32)  # (E, C)
+    y = jnp.zeros((t, d), y_exp.dtype)
+    y = y.at[tok.reshape(-1)].add(
+        (y_exp * w[..., None].astype(y_exp.dtype)).reshape(-1, d)
+    )
+
+    if mo.n_shared:
+        y = y + mlp_forward(params["shared"], cfg.mlp_type, xf)
+    return y.reshape(b, s, d), aux

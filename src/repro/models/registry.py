@@ -1,0 +1,92 @@
+"""Model registry: one uniform interface over all architecture families.
+
+``ModelBundle`` is what the PISCO trainer, the launcher and the dry-run all
+consume: init / loss / prefill / decode / specs, family-dispatched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[[Any], PyTree]  # key -> params
+    loss: Callable[[PyTree, Dict], jnp.ndarray]  # (params, batch) -> scalar
+    param_specs: Callable[..., PyTree]
+    init_cache: Callable[..., Dict]  # (batch, max_seq) -> cache
+    cache_specs: Callable[..., Dict]
+    prefill: Callable[..., Any]  # (params, batch, cache) -> (logits, cache)
+    decode: Callable[..., Any]  # (params, token, cache) -> (logits, cache)
+
+
+def get_bundle(cfg: ModelConfig) -> ModelBundle:
+    if cfg.is_enc_dec:
+        def loss(params, batch):
+            return E.encdec_loss(params, cfg, batch)
+
+        def init_cache(batch, max_seq, mem_len=None):
+            return E.init_encdec_cache(cfg, batch, max_seq, mem_len or max_seq)
+
+        def prefill(params, batch, cache):
+            # enc-dec "prefill" = run the encoder, store memory; decoder
+            # self-KV starts empty.
+            memory = E.encode(params, cfg, batch["frames"])
+            cache = dict(cache, memory=memory)
+            logits, cache = E.encdec_decode_step(params, cfg, batch["tokens"][:, :1], cache)
+            return logits, cache
+
+        def decode(params, token, cache):
+            return E.encdec_decode_step(params, cfg, token, cache)
+
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: E.init_encdec(key, cfg),
+            loss=loss,
+            param_specs=lambda model_axis="model": E.encdec_param_specs(cfg, model_axis),
+            init_cache=init_cache,
+            cache_specs=lambda batch_axes, model_axis="model": E.encdec_cache_specs(
+                cfg, batch_axes, model_axis
+            ),
+            prefill=prefill,
+            decode=decode,
+        )
+
+    def loss(params, batch):
+        return T.lm_loss(params, cfg, batch)
+
+    def prefill(params, batch, cache):
+        return T.lm_prefill(
+            params,
+            cfg,
+            batch["tokens"],
+            cache,
+            prefix_embeds=batch.get("prefix_embeds"),
+            positions=batch.get("positions"),
+        )
+
+    def decode(params, token, cache):
+        return T.lm_decode(params, cfg, token, cache)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: T.init_lm(key, cfg),
+        loss=loss,
+        param_specs=lambda model_axis="model": T.lm_param_specs(cfg, model_axis),
+        init_cache=lambda batch, max_seq: T.init_cache(cfg, batch, max_seq),
+        cache_specs=lambda batch_axes, model_axis="model": T.cache_specs(
+            cfg, batch_axes, model_axis
+        ),
+        prefill=prefill,
+        decode=decode,
+    )

@@ -1,0 +1,70 @@
+"""Rotary position embeddings, including Qwen2-VL's M-RoPE.
+
+M-RoPE (arXiv:2409.12191 §2.1): the head dim is split into three sections
+(temporal, height, width); each section rotates with its own position id.
+Text tokens use identical (t, h, w) ids so M-RoPE degenerates to 1-D RoPE;
+vision patch tokens carry distinct h/w ids.  We take 3-row position ids
+``(3, B, S)`` for the VLM and plain ``(B, S)`` elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,), float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)
+
+
+def rope_cos_sin(
+    positions: jnp.ndarray,  # (..., S) int32
+    head_dim: int,
+    theta: float,
+    mrope_sections: Optional[Tuple[int, int, int]] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables, shape positions.shape[1:] + (head_dim//2,).
+
+    With ``mrope_sections`` the positions must be (3, B, S); section i of the
+    frequency axis uses positions[i].
+    """
+    inv = rope_freqs(head_dim, theta)  # (hd/2,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, hd/2)
+        return jnp.cos(ang), jnp.sin(ang)
+    assert positions.ndim >= 3 and positions.shape[0] == 3, "M-RoPE needs (3,B,S) ids"
+    assert sum(mrope_sections) == head_dim // 2
+    ang_all = positions[..., None].astype(jnp.float32) * inv  # (3, B, S, hd/2)
+    pieces = []
+    start = 0
+    for i, sec in enumerate(mrope_sections):
+        pieces.append(ang_all[i, ..., start : start + sec])
+        start += sec
+    ang = jnp.concatenate(pieces, axis=-1)  # (B, S, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (B, S, H, hd)
+    cos: jnp.ndarray,  # (B, S, hd/2)
+    sin: jnp.ndarray,
+) -> jnp.ndarray:
+    """Rotate pairs (x[..., :hd/2], x[..., hd/2:]) — the HF 'rotate_half' layout."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)  # broadcast over heads
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate((x1 * c - x2 * s, x2 * c + x1 * s), axis=-1)
+
+
+def text_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+def mrope_text_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    """Degenerate (t==h==w) M-RoPE ids for text-only streams: (3, B, S)."""
+    pos = text_positions(batch, seq, offset)
+    return jnp.broadcast_to(pos[None], (3, batch, seq))

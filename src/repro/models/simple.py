@@ -1,0 +1,120 @@
+"""The paper's own experimental models (§5): logistic regression with a
+nonconvex regularizer, a 1-hidden-layer MLP (32 sigmoid units + softmax), and
+the small CIFAR CNN of Fig. 7 — all pure JAX.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# §5.1 logistic regression + nonconvex regularizer
+# ---------------------------------------------------------------------------
+
+
+def logreg_init(d: int) -> Dict:
+    return {"w": jnp.zeros((d,), jnp.float32)}
+
+
+def logreg_loss(params: Dict, batch: Tuple, rho: float = 0.01) -> jnp.ndarray:
+    """log(1 + exp(-y a^T x)) + rho * sum_l x_l^2 / (1 + x_l^2)  [WJZ+19]."""
+    a, y = batch
+    logits = a @ params["w"]
+    data = jnp.mean(jnp.log1p(jnp.exp(-y * logits)))
+    w = params["w"]
+    reg = rho * jnp.sum(w * w / (1.0 + w * w))
+    return data + reg
+
+
+def logreg_accuracy(params: Dict, a: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    pred = jnp.where(a @ params["w"] > 0, 1.0, -1.0)
+    return jnp.mean(pred == y)
+
+
+# ---------------------------------------------------------------------------
+# §5.2 one-hidden-layer MLP (sigmoid, 32 units, softmax CE)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_in: int = 784, hidden: int = 32, n_classes: int = 10) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": 0.1 * jax.random.normal(k1, (hidden, d_in)),
+        "c1": jnp.zeros((hidden,)),
+        "w2": 0.1 * jax.random.normal(k2, (n_classes, hidden)),
+        "c2": jnp.zeros((n_classes,)),
+    }
+
+
+def mlp_logits(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.sigmoid(x @ params["w1"].T + params["c1"])
+    return h @ params["w2"].T + params["c2"]
+
+
+def mlp_loss(params: Dict, batch: Tuple) -> jnp.ndarray:
+    x, y = batch
+    logits = mlp_logits(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def mlp_accuracy(params: Dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(jnp.argmax(mlp_logits(params, x), axis=-1) == y)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 CNN (scaled to the synthetic 16x16 CIFAR stand-in)
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w):
+    """x: (B, H, W, C), w: (kh, kw, Cin, Cout), SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_init(key, hw: int = 16, n_classes: int = 10) -> Dict:
+    ks = jax.random.split(key, 5)
+    # two conv modules (paper uses three at 32x32; the 16x16 stand-in uses two)
+    flat = (hw // 4) * (hw // 4) * 64
+    return {
+        "c1": 0.2 * jax.random.normal(ks[0], (3, 3, 3, 32)),
+        "c2": 0.2 * jax.random.normal(ks[1], (3, 3, 32, 64)),
+        "w1": 0.1 * jax.random.normal(ks[2], (128, flat)),
+        "b1": jnp.zeros((128,)),
+        "w2": 0.1 * jax.random.normal(ks[3], (n_classes, 128)),
+        "b2": jnp.zeros((n_classes,)),
+    }
+
+
+def cnn_logits(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.relu(_conv(x, params["c1"]))
+    h = _pool(h)
+    h = jax.nn.relu(_conv(h, params["c2"]))
+    h = _pool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["w1"].T + params["b1"])
+    return h @ params["w2"].T + params["b2"]
+
+
+def cnn_loss(params: Dict, batch: Tuple) -> jnp.ndarray:
+    x, y = batch
+    logits = cnn_logits(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def cnn_accuracy(params: Dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(jnp.argmax(cnn_logits(params, x), axis=-1) == y)

@@ -1,0 +1,22 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adam,
+    adamw,
+    apply_updates,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine, linear_decay
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adam",
+    "adamw",
+    "apply_updates",
+    "constant",
+    "cosine_decay",
+    "warmup_cosine",
+    "linear_decay",
+]

@@ -1,0 +1,38 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def sched(count):
+        return jnp.asarray(value, jnp.float32)
+
+    return sched
+
+
+def linear_decay(init: float, total_steps: int, final: float = 0.0):
+    def sched(count):
+        frac = jnp.clip(count.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return init + (final - init) * frac
+
+    return sched
+
+
+def cosine_decay(init: float, total_steps: int, final: float = 0.0):
+    def sched(count):
+        frac = jnp.clip(count.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return final + 0.5 * (init - final) * (1.0 + jnp.cos(jnp.pi * frac))
+
+    return sched
+
+
+def warmup_cosine(init: float, warmup_steps: int, total_steps: int, final: float = 0.0):
+    cos = cosine_decay(init, max(1, total_steps - warmup_steps), final)
+
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = init * c / max(1, warmup_steps)
+        return jnp.where(c < warmup_steps, warm, cos(count - warmup_steps))
+
+    return sched

@@ -1,0 +1,186 @@
+"""Compiled-HLO analysis: collective traffic + roofline terms.
+
+``compiled.as_text()`` is the SPMD-partitioned module of one device, so every
+byte count extracted here is *per device per step* — matching
+``cost_analysis()``'s per-device FLOPs.  Collective bytes use each collective
+op's RESULT shape (the received payload), summed per category; ``*-start``
+ops are counted, their ``*-done`` halves are not (same buffer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# `%name = <result-shape> op-name(' — result shape may be a (tuple, of, shapes)
+_OP_RE = re.compile(
+    r"=\s+(\([^)]*\)|[\w\[\],{}:#* ]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?(?:\.\d+)?\("
+)
+
+
+def shape_bytes(shape_text: str) -> int:
+    """Bytes of an HLO shape string (handles tuples by summing)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}]+)\s+([\w\-]+)\(([^)]*)\)"
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _instr_table(hlo_text: str) -> Dict[str, tuple]:
+    """name -> (shape_text, op_name, [operand names])."""
+    table: Dict[str, tuple] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape, op, operands = m.groups()
+            table[name] = (shape, op, _OPERAND_RE.findall(operands))
+    return table
+
+
+def _wire_corrected_bytes(shape_text: str, operands, table) -> int:
+    """CPU-backend float normalization upcasts bf16 collectives to f32 (a
+    host-only artifact — TPUs move bf16 natively).  When every operand of a
+    collective is a convert/convert-fusion from a narrower source, count the
+    payload at the SOURCE dtype (what the TPU wire would carry)."""
+    raw = shape_bytes(shape_text)
+    src_bytes = 0
+    for op_name in operands:
+        entry = table.get(op_name)
+        if entry is None:
+            return raw
+        shape, op, inner = entry
+        if "convert" in op_name or op == "convert":
+            # source dtype = the convert's own operand dtype
+            if inner and inner[0] in table:
+                src_shape = table[inner[0]][0]
+                src_bytes += shape_bytes(src_shape)
+                continue
+        return raw
+    return src_bytes if 0 < src_bytes < raw else raw
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-category result bytes of all collectives in a partitioned module.
+
+    Two figures per category: raw result bytes, and ``wire_*`` corrected for
+    the CPU float-normalization artifact (see :func:`_wire_corrected_bytes`).
+    ``total`` uses the corrected figures (what a TPU would move)."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    wire: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    table = _instr_table(hlo_text)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_text, kind = m.group(1), m.group(2)
+        im = _INSTR_RE.match(line)
+        operands = im.group(4) if im else ""
+        out[kind] += shape_bytes(shape_text)
+        wire[kind] += _wire_corrected_bytes(
+            shape_text, _OPERAND_RE.findall(operands), table
+        )
+        counts[kind] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    out_wire = {f"wire_{k}": v for k, v in wire.items()}
+    return {
+        **out,
+        **out_wire,
+        **out_counts,
+        "raw_total": sum(out[k] for k in COLLECTIVE_KINDS),
+        "total": sum(wire[k] for k in COLLECTIVE_KINDS),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Roofline (TPU v5e constants per the assignment)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All quantities per device per step; terms in seconds."""
+
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None  # 6·N·D (active N for MoE), whole step
+    useful_ratio: Optional[float] = None  # model_flops / (flops_per_device · chips)
+
+    @classmethod
+    def from_counts(
+        cls,
+        flops_per_device: float,
+        hbm_bytes: float,
+        coll_bytes: float,
+        *,
+        model_flops: Optional[float] = None,
+        n_chips: int = 1,
+    ) -> "Roofline":
+        compute_s = flops_per_device / PEAK_FLOPS_BF16
+        memory_s = hbm_bytes / HBM_BW
+        collective_s = coll_bytes / ICI_BW
+        terms = {
+            "compute": compute_s,
+            "memory": memory_s,
+            "collective": collective_s,
+        }
+        dominant = max(terms, key=terms.get)
+        ratio = None
+        if model_flops is not None and flops_per_device > 0:
+            ratio = model_flops / (flops_per_device * n_chips)
+        return cls(
+            flops_per_device=flops_per_device,
+            hbm_bytes_per_device=hbm_bytes,
+            collective_bytes_per_device=coll_bytes,
+            compute_s=compute_s,
+            memory_s=memory_s,
+            collective_s=collective_s,
+            dominant=dominant,
+            model_flops=model_flops,
+            useful_ratio=ratio,
+        )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)

@@ -1,0 +1,89 @@
+"""Pytree arithmetic helpers used throughout the PISCO core.
+
+All PISCO state (model estimates ``X``, tracking variables ``Y``, last local
+gradients ``G``) lives in *agent-stacked pytrees*: every leaf carries a leading
+axis of size ``n_agents``.  These helpers implement the (small) linear algebra
+Algorithm 1 needs on such trees without materializing flattened vectors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_stack(trees):
+    """Stack a list of identically-structured pytrees along a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree, n):
+    """Inverse of :func:`tree_stack`: split leading axis into ``n`` trees."""
+    return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    """Sum of elementwise products across all leaves (a scalar)."""
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x * y), a, b)
+    return jax.tree.reduce(jnp.add, leaves)
+
+
+def tree_sq_norm(a):
+    return tree_dot(a, a)
+
+
+def tree_agent_mean(tree):
+    """Mean over the leading (agent) axis, broadcast back to the same shape.
+
+    This is exactly the ``X J`` operation of the paper (J = (1/n) 11^T).
+    """
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape), tree
+    )
+
+
+def tree_agent_mix(tree, w):
+    """Apply a mixing matrix ``w`` (n, n) along the leading agent axis.
+
+    Computes, per leaf ``x`` of shape (n, ...):   out_i = sum_j w_ij x_j,
+    i.e. the compact-form ``X W^T``... note the paper writes states as columns
+    (``X in R^{d x n}``, update ``X W``); with our leading-agent-axis layout the
+    equivalent contraction is ``einsum('ij,j...->i...', W^T, x)``.  Since all
+    mixing matrices here are symmetric and doubly stochastic, ``W^T = W``;
+    we still transpose to stay correct for any future asymmetric matrix.
+    """
+    wt = jnp.asarray(w).T
+
+    def mix(x):
+        return jnp.tensordot(wt, x, axes=((1,), (0,))).astype(x.dtype)
+
+    return jax.tree.map(mix, tree)
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar elements."""
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))

@@ -1,0 +1,66 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit/smoke tests must see the
+single real CPU device (the 512-device override belongs to dryrun.py only)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def make_logreg_problem(n_agents=8, d=16, m=64, seed=0, heterogeneous=True):
+    """Tiny logistic-regression federated problem used across tests."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=d)
+    x = rng.normal(size=(n_agents * m, d))
+    logits = x @ w_true
+    y = np.where(logits + 0.2 * rng.normal(size=len(x)) > 0, 1.0, -1.0)
+    if heterogeneous:
+        order = np.argsort(y, kind="stable")
+        x, y = x[order], y[order]
+    x = x.reshape(n_agents, m, d)
+    y = y.reshape(n_agents, m)
+
+    xd, yd = jnp.asarray(x), jnp.asarray(y)
+
+    def loss_fn(params, batch):
+        a, lab = batch
+        lg = a @ params["w"]
+        return jnp.mean(jnp.log1p(jnp.exp(-lab * lg)))
+
+    def full_grad_sq(params):
+        def floss(p):
+            lg = jnp.einsum("amd,d->am", xd, p["w"])
+            return jnp.mean(jnp.log1p(jnp.exp(-yd * lg)))
+
+        g = jax.grad(floss)(params)
+        return float(sum(jnp.sum(v**2) for v in jax.tree.leaves(g)))
+
+    def sampler_factory(t_o, b=16, seed=1):
+        srng = np.random.default_rng(seed)
+
+        def sampler(k):
+            idx = srng.integers(0, m, size=(t_o + 1, n_agents, b))
+            xb = jnp.asarray(
+                np.take_along_axis(x[None], idx[..., None], axis=2)
+            )
+            yb = jnp.asarray(np.take_along_axis(y[None], idx, axis=2))
+            return (xb[:t_o], yb[:t_o]), (xb[-1], yb[-1])
+
+        return sampler
+
+    return loss_fn, full_grad_sq, sampler_factory, d

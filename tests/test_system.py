@@ -1,0 +1,91 @@
+"""End-to-end behaviour tests: the launchers and the paper's headline
+phenomena on small problems."""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_logreg_problem
+from repro.core import (
+    PiscoConfig,
+    dense_mixing,
+    make_topology,
+    replicate_params,
+    run_training,
+)
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    return env
+
+
+@pytest.mark.slow
+def test_train_launcher_end_to_end():
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.train",
+            "--arch", "qwen3-8b", "--reduced", "--rounds", "4",
+            "--n-agents", "4", "--t-o", "1", "--batch", "2", "--seq", "32",
+            "--log-every", "1",
+        ],
+        env=_env(), capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "done: 4 rounds" in proc.stdout
+    assert "loss=" in proc.stdout
+
+
+@pytest.mark.slow
+def test_serve_launcher_end_to_end():
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.serve",
+            "--arch", "mamba2-370m", "--reduced", "--batch", "2",
+            "--prompt-len", "16", "--gen", "4",
+        ],
+        env=_env(), capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "decode:" in proc.stdout
+
+
+def test_small_p_approaches_full_server_performance():
+    """Fig. 5 phenomenon: p=0.1 performs close to p=1 in rounds-to-threshold."""
+    n = 8
+    loss_fn, full_grad_sq, sampler_factory, d = make_logreg_problem(n_agents=n)
+    mixing = dense_mixing(make_topology("ring", n))
+    x0 = replicate_params({"w": jnp.zeros(d)}, n)
+    rounds = {}
+    for p in (0.0, 0.1, 1.0):
+        cfg = PiscoConfig(n_agents=n, t_o=4, eta_l=0.15, eta_c=1.0, p=p, seed=2)
+        hist = run_training(
+            "pisco", loss_fn, x0, cfg, mixing, sampler_factory(4),
+            rounds=70,
+            eval_fn=lambda xb: {"grad_sq": full_grad_sq(xb)},
+            eval_every=1,
+        )
+        r = hist.rounds_to_threshold("grad_sq", 0.05)
+        rounds[p] = r if r is not None else 10_000
+    assert rounds[0.1] <= rounds[0.0]
+    assert rounds[0.1] <= max(2 * rounds[1.0], rounds[1.0] + 15)
+
+
+@pytest.mark.slow
+def test_checkpoint_resume_in_train_launcher(tmp_path):
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.train",
+            "--arch", "mamba2-370m", "--reduced", "--rounds", "3",
+            "--n-agents", "2", "--t-o", "1", "--batch", "2", "--seq", "32",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+        ],
+        env=_env(), capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    files = os.listdir(tmp_path)
+    assert any(f.startswith("ckpt_") for f in files)

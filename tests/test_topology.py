@@ -1,0 +1,105 @@
+"""Topology & mixing-matrix properties (Definition 1, Assumption 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    GRAPHS,
+    Topology,
+    best_constant_weights,
+    erdos_renyi_graph,
+    expected_mixing_rate,
+    global_matrix,
+    is_connected,
+    is_doubly_stochastic,
+    make_topology,
+    metropolis_weights,
+    mixing_rate,
+    ring_graph,
+    torus_graph,
+)
+
+
+@pytest.mark.parametrize("name", ["ring", "path", "star", "full"])
+@pytest.mark.parametrize("n", [2, 4, 10, 16])
+@pytest.mark.parametrize("weighting", ["metropolis", "best_constant"])
+def test_doubly_stochastic(name, n, weighting):
+    topo = make_topology(name, n, weighting)
+    assert is_doubly_stochastic(topo.w)
+
+
+@given(n=st.integers(3, 24), prob=st.floats(0.05, 0.9), seed=st.integers(0, 100))
+@settings(max_examples=40, deadline=None)
+def test_er_metropolis_doubly_stochastic(n, prob, seed):
+    adj = erdos_renyi_graph(n, prob, seed)
+    w = metropolis_weights(adj)
+    assert is_doubly_stochastic(w)
+    lam = mixing_rate(w)
+    assert 0.0 <= lam <= 1.0 + 1e-9
+    # disconnected graphs must have lambda_w == 0 (Definition 1)
+    if not is_connected(adj):
+        assert lam == pytest.approx(0.0, abs=1e-9)
+
+
+@given(n=st.integers(3, 20), seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_contraction_property(n, seed):
+    """||Wx - x_bar||^2 <= (1 - lambda_w) ||x - x_bar||^2 (paper §2.1)."""
+    rng = np.random.default_rng(seed)
+    topo = make_topology("ring", n)
+    x = rng.normal(size=(n, 3))
+    xbar = x.mean(axis=0, keepdims=True)
+    lhs = np.sum((topo.w @ x - xbar) ** 2)
+    rhs = (1.0 - topo.lambda_w) * np.sum((x - xbar) ** 2)
+    assert lhs <= rhs + 1e-9
+
+
+def test_global_matrix_is_projection():
+    j = global_matrix(7)
+    assert np.allclose(j @ j, j)
+    assert mixing_rate(j) == pytest.approx(1.0)
+
+
+def test_expected_mixing_rate_formula():
+    # Assumption 1: lambda_p = lambda_w + p (1 - lambda_w)
+    assert expected_mixing_rate(0.0, 0.5) == pytest.approx(0.5)
+    assert expected_mixing_rate(0.3, 0.0) == pytest.approx(0.3)
+    assert expected_mixing_rate(0.3, 1.0) == pytest.approx(1.0)
+    topo = make_topology("ring", 10)
+    assert topo.expected_rate(0.1) == pytest.approx(
+        topo.lambda_w + 0.1 * (1 - topo.lambda_w)
+    )
+
+
+def test_disconnected_has_zero_rate_and_connected_flag():
+    topo = make_topology("disconnected", 12, n_components=3)
+    assert not topo.connected
+    assert topo.lambda_w == pytest.approx(0.0, abs=1e-9)
+
+
+def test_ring_detected_as_circulant():
+    topo = make_topology("ring", 8)
+    assert topo.shifts is not None
+    shifts = dict((s, w) for s, w in topo.shifts)
+    assert 1 in shifts and (8 - 1) in shifts or -1 in shifts
+
+
+def test_torus_shapes():
+    adj = torus_graph(4, 4)
+    assert adj.sum(axis=1).min() == 4  # every node has 4 neighbors
+    topo = make_topology("torus", 16, rows=4)
+    assert is_doubly_stochastic(topo.w)
+    assert topo.connected
+
+
+def test_path_worse_than_ring():
+    ring = make_topology("ring", 16)
+    path = make_topology("path", 16)
+    full = make_topology("full", 16)
+    assert path.lambda_w < ring.lambda_w < full.lambda_w
+
+
+def test_best_constant_on_ring_beats_or_matches_metropolis():
+    ring_m = make_topology("ring", 16, "metropolis")
+    ring_b = make_topology("ring", 16, "best_constant")
+    assert ring_b.lambda_w >= ring_m.lambda_w - 1e-9

@@ -12,7 +12,9 @@ import numpy as np
 
 from repro.core import (
     PiscoConfig,
+    compress_mixing,
     dense_mixing,
+    make_compressor,
     make_topology,
     replicate_params,
     run_training,
@@ -76,11 +78,18 @@ def run_pisco_variant(
     algo: str = "pisco",
     eval_every: int = 1,
     topo_kwargs: Optional[dict] = None,
+    compression: Optional[str] = None,
+    error_feedback: bool = True,
 ):
     n = data.n_agents
     cfg = PiscoConfig(n_agents=n, t_o=t_o, eta_l=eta_l, eta_c=eta_c, p=p, seed=seed)
     topo = make_topology(topology_name, n, **(topo_kwargs or {}))
     mixing = dense_mixing(topo)
+    if compression is not None:
+        mixing = compress_mixing(
+            mixing, make_compressor(compression),
+            error_feedback=error_feedback, seed=seed,
+        )
     sampler = RoundSampler(data, batch_size=min(batch, data.samples_per_agent), t_o=t_o, seed=seed)
     x0 = replicate_params(params0, n)
     hist = run_training(

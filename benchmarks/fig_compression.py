@@ -1,0 +1,117 @@
+"""Compression sweep: bits-to-target-accuracy over compression ratio × p.
+
+The new axis PISCO's round-saving (`p`, `T_o`) composes with: compressed
+gossip (int8/int4 quantization, top-k + error feedback) shrinks every
+agent-to-agent message, so the natural readout is *network bytes* — not
+rounds — when the running-mean gradient norm first crosses the target (the
+Fig.-4 protocol with bits on the x-axis).
+
+Paper-claims extended:
+* int8/int4 gossip reaches the uncompressed target at a fraction of the
+  gossip bytes, with round counts within ~2x;
+* compression composes with semi-decentralization: the best (compressor, p)
+  cell beats both axes used alone.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    comm_rounds_to_targets,
+    make_logreg_workload,
+    run_pisco_variant,
+    save_result,
+)
+
+COMPRESSORS = [None, "q8", "q4", "top0.1"]
+P_GRID = [0.0, 0.05, 0.1, 0.3]
+
+
+def _bytes_to_target(hist, grad_target: float):
+    """(rounds, gossip_bytes, server_bytes, total_bytes) at first crossing."""
+    r = hist.rounds_to_threshold("grad_sq", grad_target, mode="running_le")
+    if r is None:
+        return None
+    n_gossip = sum(1 for g in hist.is_global[: r + 1] if not g)
+    n_server = (r + 1) - n_gossip
+    bm = hist.byte_model
+    return {
+        "rounds": r + 1,
+        "gossip_bytes": n_gossip * bm.gossip_round_bytes,
+        "server_bytes": n_server * bm.server_round_bytes,
+        "total_bytes": bm.total_bytes(n_gossip, n_server),
+    }
+
+
+def run(quick: bool = False, seeds=(0, 1, 2)) -> dict:
+    rounds = 150 if quick else 600
+    p_grid = [0.05, 0.1] if quick else P_GRID
+    seeds = seeds[:1] if quick else seeds
+    grad_target = 0.002
+
+    workloads = {
+        seed: make_logreg_workload(quick=quick, seed=seed) for seed in seeds
+    }
+    results = {}
+    for comp in COMPRESSORS:
+        for p in p_grid:
+            per_seed = []
+            for seed in seeds:
+                data, loss_fn, eval_fn, params0 = workloads[seed]
+                hist, _ = run_pisco_variant(
+                    data=data, loss_fn=loss_fn, eval_fn=eval_fn, params0=params0,
+                    p=p, t_o=1, eta_l=0.5, rounds=rounds, seed=seed,
+                    compression=comp,
+                )
+                per_seed.append(_bytes_to_target(hist, grad_target))
+            key = f"comp={comp or 'none'},p={p:.4f}"
+            vals = [s for s in per_seed if s is not None]
+            if not vals:
+                results[key] = None
+                continue
+            agg = {
+                k: float(np.mean([v[k] for v in vals]))
+                for k in ("rounds", "gossip_bytes", "server_bytes", "total_bytes")
+            }
+            agg["n_reached"] = len(vals)
+            results[key] = agg
+    payload = {"bench": "fig_compression", "quick": quick, "results": results}
+    save_result("fig_compression", payload)
+    return payload
+
+
+def best_same_p_savings(results: dict):
+    """Max gossip-byte savings of any compressed cell vs fp32 *at the same p*
+    (isolates codec savings from schedule savings).  Lives here, next to the
+    result-key format it parses.  Returns None if no pair is comparable."""
+    savings = []
+    for key, agg in results.items():
+        if key.startswith("comp=none") or not agg:
+            continue
+        p_key = key.split(",", 1)[1]
+        base = results.get(f"comp=none,{p_key}")
+        if base:
+            savings.append(base["gossip_bytes"] / max(1.0, agg["gossip_bytes"]))
+    return max(savings) if savings else None
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    payload = run(quick=args.quick)
+    print(f"{'compressor,p':>20} | {'rounds':>7} {'gossip MB':>10} {'total MB':>9}")
+    for key, agg in payload["results"].items():
+        if agg is None:
+            print(f"{key:>20} | {'target never reached':>28}")
+            continue
+        print(
+            f"{key:>20} | {agg['rounds']:7.1f} "
+            f"{agg['gossip_bytes'] / 1e6:10.3f} {agg['total_bytes'] / 1e6:9.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale settings")
     ap.add_argument(
         "--only", nargs="*", default=None,
-        help="subset: fig4 fig5 fig6 fig7 table2 roofline",
+        help="subset: fig4 fig5 fig6 fig7 table2 roofline compression",
     )
     args = ap.parse_args()
     quick = not args.full
@@ -89,6 +89,18 @@ def main() -> None:
         accs = {k: v["final_test_acc"] for k, v in res.items()}
         derived = ";".join(f"{k}={v:.2f}" for k, v in accs.items())
         _row("fig7_cnn", time.perf_counter() - t0, derived)
+
+    if only is None or "compression" in only:
+        from benchmarks import fig_compression
+
+        t0 = time.perf_counter()
+        payload = fig_compression.run(quick=quick)
+        res = payload["results"]
+        saving = fig_compression.best_same_p_savings(res)
+        derived = (
+            f"gossip_byte_savings_vs_fp32={saving:.1f}x" if saving else "n/a"
+        )
+        _row("fig_compression", time.perf_counter() - t0, derived)
 
     if only is None or "table2" in only:
         from benchmarks import table2_complexity

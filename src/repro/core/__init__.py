@@ -3,6 +3,7 @@ from repro.core.pisco import (
     PiscoConfig,
     PiscoState,
     RoundMetrics,
+    init_compression_state,
     init_state,
     make_round_fn,
     make_stacked_value_and_grad,
@@ -32,18 +33,34 @@ from repro.core.schedule import (
     BernoulliSchedule,
     PeriodicSchedule,
     CommAccountant,
+    RoundByteModel,
     make_schedule,
+)
+from repro.core.compression import (
+    Compressor,
+    IdentityCompressor,
+    StochasticQuantizer,
+    TopKCompressor,
+    CompressedGossip,
+    compress_mixing,
+    make_compressor,
+    make_byte_model,
+    message_bytes,
 )
 from repro.core.trainer import History, run_training, make_algorithm_round_fns
 
 __all__ = [
-    "PiscoConfig", "PiscoState", "RoundMetrics", "init_state", "make_round_fn",
+    "PiscoConfig", "PiscoState", "RoundMetrics", "init_state",
+    "init_compression_state", "make_round_fn",
     "make_stacked_value_and_grad", "replicate_params", "decentralized_config",
     "federated_config", "Topology", "make_topology", "mixing_rate",
     "expected_mixing_rate", "is_doubly_stochastic", "is_connected",
     "global_matrix", "MixingOps", "dense_mixing", "identity_mixing",
     "collective_global_mixing", "collective_shift_mixing",
     "collective_dense_mixing", "hierarchical_mixing", "BernoulliSchedule",
-    "PeriodicSchedule", "CommAccountant", "make_schedule", "History",
-    "run_training", "make_algorithm_round_fns",
+    "PeriodicSchedule", "CommAccountant", "RoundByteModel", "make_schedule",
+    "Compressor", "IdentityCompressor", "StochasticQuantizer",
+    "TopKCompressor", "CompressedGossip", "compress_mixing", "make_compressor",
+    "make_byte_model", "message_bytes", "History", "run_training",
+    "make_algorithm_round_fns",
 ]

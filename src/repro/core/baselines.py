@@ -140,8 +140,9 @@ def make_periodical_gt_round_fn(
     loss_fn: LossFn, cfg: PiscoConfig, mixing: MixingOps
 ) -> Callable:
     """[LLKS24]: gradient tracking with T_o local steps, gossip every round —
-    exactly PISCO's gossip round (Remark 1)."""
-    return make_round_fn(loss_fn, cfg, mixing, global_round=False)
+    exactly PISCO's gossip round (Remark 1).  GTState carries no error-feedback
+    residuals, so compressed mixing runs through the stateless path."""
+    return make_round_fn(loss_fn, cfg, mixing, global_round=False, use_ef=False)
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.topology import Topology
+from repro.utils.compat import shard_map
 from repro.utils.pytree import tree_agent_mean, tree_agent_mix
 
 PyTree = Any
@@ -48,6 +49,16 @@ class MixingOps:
     # Bytes moved per invocation per agent, filled in by the launcher for
     # communication-cost accounting (benchmarks fig4).
     gossip_edges: int = 0  # number of neighbor messages per gossip round
+    # Directed neighbor messages per gossip invocation, network-wide — the
+    # quantity the byte model prices.  None => derive as 2 * gossip_edges
+    # (one message per direction over each undirected edge); collective
+    # mixers, whose gossip_edges counts per-agent shifts, set it explicitly.
+    gossip_messages: Optional[int] = None
+    # Optional CompressedGossip spec (repro.core.compression).  When set,
+    # ``gossip`` is already the stateless compressed form and PISCO's round
+    # function threads the stateful error-feedback variant through its state;
+    # the byte model prices gossip at the compressor's wire format.
+    compression: Optional[Any] = None
 
 
 # ---------------------------------------------------------------------------
@@ -113,12 +124,11 @@ def collective_global_mixing(
 
             return jax.tree.map(leaf, local_tree)
 
-        return jax.shard_map(
+        return shard_map(
             per_shard,
             mesh=mesh,
             in_specs=(spec_tree,),
             out_specs=spec_tree,
-            check_vma=False,
         )(tree)
 
     return MixingOps(
@@ -181,23 +191,25 @@ def collective_shift_mixing(
 
             return jax.tree.map(leaf, local_tree)
 
-        return jax.shard_map(
+        return shard_map(
             per_shard,
             mesh=mesh,
             in_specs=(spec_tree,),
             out_specs=spec_tree,
-            check_vma=False,
         )(tree)
 
     g = collective_global_mixing(mesh, agent_axes, spec_tree)
     n_edges = sum(
         len([s for s, _ in pairs if s != 0]) for pairs in shifts_per_axis.values()
     )
+    n_agents = int(np.prod([mesh.shape[a] for a in shifts_per_axis]))
     return MixingOps(
         gossip=gossip,
         global_avg=g.global_avg,
         name="collective/shift",
         gossip_edges=n_edges,
+        # every agent ships one message per nonzero shift
+        gossip_messages=n_agents * n_edges,
     )
 
 
@@ -230,12 +242,11 @@ def collective_dense_mixing(
 
             return jax.tree.map(leaf, local_tree)
 
-        return jax.shard_map(
+        return shard_map(
             per_shard,
             mesh=mesh,
             in_specs=(spec_tree,),
             out_specs=spec_tree,
-            check_vma=False,
         )(tree)
 
     g = collective_global_mixing(mesh, agent_axes, spec_tree)
@@ -251,34 +262,17 @@ def compressed_mixing(
     base: MixingOps,
     bits: int = 8,
 ) -> MixingOps:
-    """Beyond-paper extension (the paper's Conclusions list communication
-    compression [ZLL+22] as future work): quantize the state to ``bits``-bit
-    integers before gossip, dequantize after — 4x (int8) or 8x (int4) wire
-    savings on fp32 states.
-
-    Symmetric per-leaf scaling, no error feedback (BEER's EF would compose
-    here as a further iteration).  The server round (J) stays exact — the
-    expensive link gets the exact average, matching the paper's emphasis
-    that server rounds drive the consensus floor.
+    """Backward-compatible int-quantized gossip (the original beyond-paper
+    extension).  Now a thin front for :mod:`repro.core.compression`:
+    deterministic-rounding quantizer, error feedback on, mean-preserving
+    difference form, byte-priced wire format.  The server round (J) stays
+    exact — the expensive link gets the exact average, matching the paper's
+    emphasis that server rounds drive the consensus floor.
     """
-    assert bits in (4, 8)
-    qmax = float(2 ** (bits - 1) - 1)
+    from repro.core.compression import StochasticQuantizer, compress_mixing
 
-    def quantize(tree: PyTree):
-        def leaf(x):
-            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax
-            q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
-            return (q * scale).astype(x.dtype)
-
-        return jax.tree.map(leaf, tree)
-
-    def gossip(tree: PyTree) -> PyTree:
-        return base.gossip(quantize(tree))
-
-    return dataclasses.replace(
-        base,
-        gossip=gossip,
-        name=base.name + f"/q{bits}",
+    return compress_mixing(
+        base, StochasticQuantizer(bits=bits, stochastic=False), error_feedback=True
     )
 
 

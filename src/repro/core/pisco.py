@@ -65,6 +65,10 @@ class PiscoState(NamedTuple):
     y: PyTree  # gradient-tracking variables Y^k
     g: PyTree  # last stochastic gradients G^k
     step: jnp.ndarray  # round counter k
+    # Compressed-gossip side state: () when compression is off (zero leaves,
+    # zero bytes), else {"x": residual, "y": residual, "key": PRNGKey} from
+    # CompressedGossip.init_ef (see repro.core.compression).
+    ef: PyTree = ()
 
 
 class RoundMetrics(NamedTuple):
@@ -87,6 +91,14 @@ def init_state(loss_fn: LossFn, x0: PyTree, batch0: Any) -> PiscoState:
     same point: X^0 = x^0 1^T)."""
     _, g0 = make_stacked_value_and_grad(loss_fn)(x0, batch0)
     return PiscoState(x=x0, y=g0, g=g0, step=jnp.zeros((), jnp.int32))
+
+
+def init_compression_state(state: PiscoState, mixing: MixingOps) -> PiscoState:
+    """Attach error-feedback residuals when ``mixing`` carries a compressor
+    (no-op otherwise); the trainer calls this right after :func:`init_state`."""
+    if mixing.compression is None:
+        return state
+    return state._replace(ef=mixing.compression.init_ef(state.x))
 
 
 def replicate_params(params: PyTree, n_agents: int) -> PyTree:
@@ -133,11 +145,19 @@ def make_round_fn(
     *,
     global_round: bool,
     compute_metrics: bool = True,
+    use_ef: bool = True,
 ) -> Callable[[PiscoState, Any, Any], Tuple[PiscoState, RoundMetrics]]:
     """Build one jittable PISCO round for a fixed W^k kind.
 
     The trainer compiles this twice (gossip / global) and dispatches per the
     host-side Bernoulli(p) draw.
+
+    When ``mixing`` carries a compression spec and this is a gossip round,
+    the two mixes go through the stateful error-feedback path: residuals for
+    the X and Y streams ride along in ``state.ef`` (initialized by
+    :func:`init_compression_state`).  ``use_ef=False`` forces the stateless
+    compressed gossip instead — for callers whose state cannot carry
+    residuals (the baselines in :mod:`repro.core.baselines`).
 
     Args to the returned fn:
       state:         PiscoState
@@ -146,6 +166,7 @@ def make_round_fn(
     """
     stacked_vg = make_stacked_value_and_grad(loss_fn)
     mix = mixing.global_avg if global_round else mixing.gossip
+    compressed = mixing.compression is not None and not global_round and use_ef
 
     def round_fn(state: PiscoState, local_batches, comm_batch):
         x_to, y_to, g_to, mean_loss = _local_phase(
@@ -158,13 +179,27 @@ def make_round_fn(
             x_to,
             y_to,
         )
-        x_new = mix(cand)
-        # (4b): fresh-batch gradients at the mixed point
-        loss_c, g_new = stacked_vg(x_new, comm_batch)
-        # (4c): Y^{k+1} = (Y^{T_o} + G^{k+1} - G^{T_o}) W^k
-        y_new = mix(tree_add(y_to, tree_sub(g_new, g_to)))
+        ef = getattr(state, "ef", ())
+        if compressed:
+            cg = mixing.compression
+            key, kx, ky = jax.random.split(ef["key"], 3)
+            x_new, res_x = cg(cand, ef["x"], kx)
+            # (4b): fresh-batch gradients at the mixed point
+            loss_c, g_new = stacked_vg(x_new, comm_batch)
+            # (4c) compressed: the difference form preserves mean_i over the
+            # agent axis, so Lemma 1 (mean Y == mean G) survives exactly.
+            y_new, res_y = cg(tree_add(y_to, tree_sub(g_new, g_to)), ef["y"], ky)
+            ef = {"x": res_x, "y": res_y, "key": key}
+        else:
+            x_new = mix(cand)
+            # (4b): fresh-batch gradients at the mixed point
+            loss_c, g_new = stacked_vg(x_new, comm_batch)
+            # (4c): Y^{k+1} = (Y^{T_o} + G^{k+1} - G^{T_o}) W^k
+            y_new = mix(tree_add(y_to, tree_sub(g_new, g_to)))
 
-        new_state = PiscoState(x=x_new, y=y_new, g=g_new, step=state.step + 1)
+        new_state = PiscoState(
+            x=x_new, y=y_new, g=g_new, step=state.step + 1, ef=ef
+        )
         if compute_metrics:
             gbar = jax.tree.map(lambda v: jnp.mean(v, axis=0), g_new)
             metrics = RoundMetrics(

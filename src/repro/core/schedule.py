@@ -1,9 +1,13 @@
-"""Host-side communication schedules.
+"""Host-side communication schedules and cost accounting.
 
 The paper's line 8 — ``W^k = J w.p. p else W`` — is an i.i.d. Bernoulli(p)
 sequence.  We also provide the deterministic every-H schedule of Gossip-PGA /
 HL-SGD for the baseline comparisons (Table 1), and an accountant that tallies
-agent-to-agent vs agent-to-server rounds (Figure 4's x/y axes).
+agent-to-agent vs agent-to-server rounds (Figure 4's x/y axes) — now also in
+*bytes*, so compressed-gossip runs can put bits on the x-axis: server rounds
+ship full precision while gossip rounds ship whatever the attached compressor
+prices (:class:`RoundByteModel`, built by
+:func:`repro.core.compression.make_byte_model`).
 """
 from __future__ import annotations
 
@@ -15,20 +19,64 @@ import numpy as np
 
 @dataclasses.dataclass
 class CommAccountant:
-    """Counts communication rounds by kind (paper Fig. 4)."""
+    """Counts communication rounds — and bytes — by kind (paper Fig. 4)."""
 
     agent_to_agent: int = 0
     agent_to_server: int = 0
+    agent_to_agent_bytes: int = 0
+    agent_to_server_bytes: int = 0
 
-    def record(self, is_global: bool) -> None:
+    def record(self, is_global: bool, nbytes: int = 0) -> None:
         if is_global:
             self.agent_to_server += 1
+            self.agent_to_server_bytes += nbytes
         else:
             self.agent_to_agent += 1
+            self.agent_to_agent_bytes += nbytes
 
     @property
     def total(self) -> int:
         return self.agent_to_agent + self.agent_to_server
+
+    @property
+    def total_bytes(self) -> int:
+        return self.agent_to_agent_bytes + self.agent_to_server_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundByteModel:
+    """Closed-form network-wide bytes for one communication round.
+
+    A gossip round moves compressed neighbor messages; a server round moves
+    full-precision uploads + broadcast downloads.  Pure arithmetic — the
+    sizing lives in :func:`repro.core.compression.make_byte_model`.
+    """
+
+    gossip_round_bytes: int
+    server_round_bytes: int
+    gossip_message_bytes: int = 0  # one agent's compressed message
+    server_message_bytes: int = 0  # one agent's full-precision message
+
+    def round_bytes(self, is_global: bool) -> int:
+        return self.server_round_bytes if is_global else self.gossip_round_bytes
+
+    def total_bytes(self, n_gossip_rounds: int, n_server_rounds: int) -> int:
+        """Exact total for a realized schedule (what the accountant tallies)."""
+        return (
+            n_gossip_rounds * self.gossip_round_bytes
+            + n_server_rounds * self.server_round_bytes
+        )
+
+    def expected_bytes(self, rounds: int, p: float) -> float:
+        """E[bytes] after ``rounds`` i.i.d. Bernoulli(p) draws."""
+        return rounds * (
+            p * self.server_round_bytes + (1.0 - p) * self.gossip_round_bytes
+        )
+
+    def periodic_bytes(self, rounds: int, period: int) -> int:
+        """Exact total under the every-H schedule (server when (k+1) % H == 0)."""
+        n_server = rounds // period
+        return self.total_bytes(rounds - n_server, n_server)
 
 
 class BernoulliSchedule:

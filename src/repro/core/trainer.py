@@ -19,9 +19,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compression import make_byte_model
 from repro.core.mixing import MixingOps
-from repro.core.pisco import LossFn, PiscoConfig, make_round_fn, init_state
-from repro.core.schedule import CommAccountant, make_schedule
+from repro.core.pisco import (
+    LossFn,
+    PiscoConfig,
+    init_compression_state,
+    init_state,
+    make_round_fn,
+)
+from repro.core.schedule import CommAccountant, RoundByteModel, make_schedule
 from repro.core import baselines as B
 
 PyTree = Any
@@ -29,6 +36,19 @@ PyTree = Any
 Sampler = Callable[[int], tuple]
 # eval_fn(x_bar) -> dict of python floats
 EvalFn = Callable[[PyTree], Dict[str, float]]
+
+# Mixing invocations per communication round, for the byte model: gradient
+# tracking mixes both X and Y; plain-SGD families mix X only.  SCAFFOLD's
+# server exchange moves the model plus the control variate (2 payloads).
+MIXES_PER_ROUND = {
+    "pisco": 2,
+    "dsgt": 2,
+    "periodical_gt": 2,
+    "dsgd": 1,
+    "gossip_pga": 1,
+    "fedavg": 1,
+    "scaffold": 2,
+}
 
 
 @dataclasses.dataclass
@@ -41,6 +61,7 @@ class History:
     is_global: List[bool] = dataclasses.field(default_factory=list)
     eval_metrics: List[Dict[str, float]] = dataclasses.field(default_factory=list)
     accountant: CommAccountant = dataclasses.field(default_factory=CommAccountant)
+    byte_model: Optional[RoundByteModel] = None
     wall_time_s: float = 0.0
 
     def running_mean_eval(self, key: str) -> np.ndarray:
@@ -79,7 +100,7 @@ def make_algorithm_round_fns(
     eta = eta if eta is not None else cfg.eta_l
     if algo == "pisco":
         return (
-            lambda lf, x0, b0: init_state(lf, x0, b0),
+            lambda lf, x0, b0: init_compression_state(init_state(lf, x0, b0), mixing),
             make_round_fn(loss_fn, cfg, mixing, global_round=False),
             make_round_fn(loss_fn, cfg, mixing, global_round=True),
             make_schedule(cfg.p, cfg.seed),
@@ -137,6 +158,12 @@ def run_training(
     state = init_fn(loss_fn, x0_stacked, comm0)
 
     hist = History()
+    hist.byte_model = make_byte_model(
+        mixing,
+        x0_stacked,
+        cfg.n_agents,
+        mixes_per_round=MIXES_PER_ROUND.get(algo, 1),
+    )
     t0 = time.perf_counter()
     for k in range(rounds):
         local_batches, comm_batch = sampler(k)
@@ -147,7 +174,7 @@ def run_training(
         hist.grad_sq_norm.append(float(metrics.grad_sq_norm))
         hist.consensus_err.append(float(metrics.consensus_err))
         hist.is_global.append(is_global)
-        hist.accountant.record(is_global)
+        hist.accountant.record(is_global, hist.byte_model.round_bytes(is_global))
         if eval_fn is not None and (k % eval_every == 0 or k == rounds - 1):
             x_bar = jax.tree.map(lambda v: jnp.mean(v, axis=0), state.x)
             hist.eval_metrics.append(dict(eval_fn(x_bar), round=k))

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gt_update as _gt
+from repro.kernels import quantize as _qz
 from repro.kernels import ssd_scan as _ssd
 
 
@@ -72,3 +73,17 @@ def fused_mix_combine(
         w_self=w_self, w_left=w_left, w_right=w_right,
         interpret=interp,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def rowwise_quant_dequant(x, *, bits: int = 8, interpret: Optional[bool] = None):
+    """Per-agent-row int quantizer round trip over (n_agents, d)."""
+    interp = _default_interpret() if interpret is None else interpret
+    return _qz.rowwise_quant_dequant(x, bits=bits, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def fused_compressed_mix(x, w, *, bits: int = 8, interpret: Optional[bool] = None):
+    """Fused quantize → mix → dequantize:  x + W·q(x) − q(x)."""
+    interp = _default_interpret() if interpret is None else interpret
+    return _qz.fused_compressed_mix(x, w, bits=bits, interpret=interp)

@@ -1,0 +1,157 @@
+"""Fused quantize → mix → dequantize Pallas kernels for compressed gossip.
+
+The compressed simulation path (repro.core.compression) evaluates, per leaf,
+
+    q   = dequant(quant(x))          per-agent-row symmetric int grid
+    out = x + W q - q                mean-preserving difference gossip
+
+Unfused that is four HBM round trips over the agent-stacked state; the
+kernels here do one pass per column block.  Same tiling discipline as
+gt_update.py: arrays are processed as lane-aligned ``(rows, 128·c)`` tiles
+with a padded tail, rows padded to the fp32 sublane multiple.  The agent
+axis (rows) is small, so W lives whole in VMEM and the ``W q`` contraction
+hits the MXU.
+
+Per-row scales must see the *entire* row, which a column-blocked grid can't,
+so quantization is two-phase: a max-reduction kernel accumulates row scales
+across column blocks (grid-carried VMEM accumulator), then the fused kernel
+quantizes, mixes, and combines in one pass.  Rounding is deterministic
+round-to-nearest — bit-matching `kernels/ref.py` and the ``stochastic=False``
+compressor — so parity tests hold to fp32 exactness.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+COL_BLOCK = 512  # lanes per grid step; multiple of LANE
+
+
+def _qmax(bits: int) -> float:
+    assert bits in (4, 8), "int8 / int4 wire formats only"
+    return float(2 ** (bits - 1) - 1)
+
+
+def _pad2d(x: jnp.ndarray, col_multiple: int) -> Tuple[jnp.ndarray, int, int]:
+    """Pad (n, d) to (sublane-multiple, col_multiple-multiple) with zeros."""
+    n, d = x.shape
+    np_ = -(-n // SUBLANE) * SUBLANE
+    dp = -(-d // col_multiple) * col_multiple
+    if (np_, dp) != (n, d):
+        x = jnp.pad(x, ((0, np_ - n), (0, dp - d)))
+    return x, n, d
+
+
+def _row_absmax_kernel(x_ref, o_ref):
+    j = pl.program_id(0)
+    m = jnp.max(jnp.abs(x_ref[...].astype(jnp.float32)), axis=1, keepdims=True)
+    m = jnp.broadcast_to(m, o_ref.shape)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = m
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] = jnp.maximum(o_ref[...], m)
+
+
+def _quant_dequant_kernel(x_ref, s_ref, o_ref, *, qmax):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(s_ref[:, :1].astype(jnp.float32), 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    o_ref[...] = (q * scale).astype(o_ref.dtype)
+
+
+def _compressed_mix_kernel(x_ref, w_ref, s_ref, o_ref, *, qmax):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(s_ref[:, :1].astype(jnp.float32), 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax) * scale
+    mixed = jnp.dot(
+        w_ref[...].astype(jnp.float32), q, preferred_element_type=jnp.float32
+    )
+    o_ref[...] = (x + mixed - q).astype(o_ref.dtype)
+
+
+def _row_scales(xp: jnp.ndarray, cb: int, interpret: bool) -> jnp.ndarray:
+    """(rows, LANE) array whose every lane holds the row's abs-max."""
+    rows, dp = xp.shape
+    grid = (dp // cb,)
+    return pl.pallas_call(
+        _row_absmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, cb), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((rows, LANE), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(xp)
+
+
+def rowwise_quant_dequant(
+    x: jnp.ndarray, *, bits: int = 8, interpret: bool = False
+) -> jnp.ndarray:
+    """Dequantized round-trip of a per-agent-row symmetric quantizer.
+
+    ``x`` is (n_agents, d); matches ``rowwise_quant_dequant_ref`` and the
+    deterministic ``StochasticQuantizer`` bit-for-bit.
+    """
+    qm = _qmax(bits)
+    xp, n, d = _pad2d(x, LANE)
+    rows, dp = xp.shape
+    cb = min(COL_BLOCK, dp)
+    xp, _, _ = _pad2d(xp, cb)
+    dp = xp.shape[1]
+    scales = _row_scales(xp, cb, interpret)
+    out = pl.pallas_call(
+        functools.partial(_quant_dequant_kernel, qmax=qm),
+        grid=(dp // cb,),
+        in_specs=[
+            pl.BlockSpec((rows, cb), lambda j: (0, j)),
+            pl.BlockSpec((rows, LANE), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, cb), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp, scales)
+    return out[:n, :d]
+
+
+def fused_compressed_mix(
+    x: jnp.ndarray, w: jnp.ndarray, *, bits: int = 8, interpret: bool = False
+) -> jnp.ndarray:
+    """One-pass ``x + W·q(x) − q(x)`` with per-row int-``bits`` quantization.
+
+    ``x`` is (n_agents, d) agent-stacked state, ``w`` the (n, n) doubly
+    stochastic mixing matrix.  The quantized payload never round-trips
+    through HBM: scale application, the MXU contraction with W, and the
+    difference combine happen in VMEM per column block.
+    """
+    qm = _qmax(bits)
+    n, d = x.shape
+    assert w.shape == (n, n), f"w {w.shape} vs x {x.shape}"
+    xp, _, _ = _pad2d(x, LANE)
+    rows, dp = xp.shape
+    cb = min(COL_BLOCK, dp)
+    xp, _, _ = _pad2d(xp, cb)
+    dp = xp.shape[1]
+    wp = jnp.zeros((rows, rows), jnp.float32).at[:n, :n].set(w.astype(jnp.float32))
+    scales = _row_scales(xp, cb, interpret)
+    out = pl.pallas_call(
+        functools.partial(_compressed_mix_kernel, qmax=qm),
+        grid=(dp // cb,),
+        in_specs=[
+            pl.BlockSpec((rows, cb), lambda j: (0, j)),
+            pl.BlockSpec((rows, rows), lambda j: (0, 0)),
+            pl.BlockSpec((rows, LANE), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, cb), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp, wp, scales)
+    return out[:n, :d]

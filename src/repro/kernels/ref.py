@@ -107,3 +107,23 @@ def neighbor_combine_ref(
 ) -> jnp.ndarray:
     """Post-ppermute ring-gossip weighted combine."""
     return w_self * self_x + w_left * left + w_right * right
+
+
+def rowwise_quant_dequant_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-agent-row symmetric quantizer round trip, round-to-nearest.
+
+    x: (n_agents, d).  Identical math to the deterministic path of
+    ``repro.core.compression.StochasticQuantizer``.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=1, keepdims=True), 1e-12) / qmax
+    q = jnp.clip(jnp.round(xf / scale), -qmax, qmax)
+    return (q * scale).astype(x.dtype)
+
+
+def compressed_mix_ref(x: jnp.ndarray, w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Mean-preserving compressed gossip:  x + W·q(x) − q(x)."""
+    q = rowwise_quant_dequant_ref(x, bits).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    return (xf + w.astype(jnp.float32) @ q - q).astype(x.dtype)

@@ -1,0 +1,46 @@
+"""JAX version compatibility shims.
+
+The code targets the current jax API (``jax.shard_map`` with ``check_vma``,
+``jax.make_mesh`` with ``axis_types``); the pinned container ships an older
+jax where shard_map lives in ``jax.experimental`` (``check_rep``) and meshes
+are built from a device array.  These two helpers pick whichever spelling the
+installed jax supports, so both the library and the subprocess-based
+distributed tests run on either version.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with replication checking off, on any jax version."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=False,
+            )
+        except TypeError:  # pre-check_vma spelling
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=False,
+            )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """Auto-axis mesh over the first prod(shape) devices, on any jax version."""
+    axes = tuple(axes)
+    if hasattr(jax, "make_mesh") and hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    n = math.prod(shape)
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)

@@ -1,0 +1,78 @@
+"""Optional-hypothesis shim.
+
+The property tests degrade gracefully when `hypothesis` is not installed:
+``given`` becomes a fixed-example driver that runs the test body over a small
+deterministic grid drawn from each strategy's endpoints (min / midpoint / max,
+or every element of a ``sampled_from``), and ``settings`` becomes a no-op.
+With hypothesis installed, the real library is re-exported unchanged, so the
+full randomized property tests still run.
+
+Usage in test modules:  ``from _hyp import given, settings, st``
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade to fixed-example tests
+    import functools
+    import inspect
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module surface
+        @staticmethod
+        def integers(min_value=0, max_value=100):
+            mid = (min_value + max_value) // 2
+            return _Strategy(dict.fromkeys([min_value, mid, max_value]))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            mid = 0.5 * (min_value + max_value)
+            return _Strategy(dict.fromkeys([min_value, mid, max_value]))
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(elements)
+
+    def given(**strats):
+        for name, s in strats.items():
+            assert isinstance(s, _Strategy), f"unsupported strategy for {name!r}"
+
+        def deco(fn):
+            n_examples = max(len(s.examples) for s in strats.values())
+            sig = inspect.signature(fn)
+            remaining = [
+                p for pname, p in sig.parameters.items() if pname not in strats
+            ]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for i in range(n_examples):
+                    drawn = {
+                        k: s.examples[i % len(s.examples)]
+                        for k, s in strats.items()
+                    }
+                    fn(*args, **drawn, **kwargs)
+
+            # pytest must only see the non-strategy params (fixtures)
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            return wrapper
+
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -25,8 +25,9 @@ _SCRIPT = textwrap.dedent(
     from repro.launch.steps import gossip_matrix, mesh_gossip_shifts
     from repro.utils.pytree import tree_agent_mean, tree_agent_mix
 
-    mesh = jax.make_mesh((8,), ("agents",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.utils.compat import make_mesh
+
+    mesh = make_mesh((8,), ("agents",))
     n = 8
     rng = np.random.default_rng(0)
     spec_tree = {"w": P("agents", None), "b": P("agents")}

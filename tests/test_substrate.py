@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 # ---------------------------------------------------------------------------
 # data
@@ -131,9 +131,10 @@ def test_checkpoint_pisco_state(tmp_path):
     )
     p = save_checkpoint(str(tmp_path), 5, state)
     step, tree = restore_checkpoint(p)
-    x, y, g, stp = tree
+    x, y, g, stp, ef = tree
     np.testing.assert_array_equal(x["w"], np.ones((4, 3)))
     assert int(stp) == 5
+    assert ef == ()  # compression off => empty error-feedback slot
 
 
 # ---------------------------------------------------------------------------

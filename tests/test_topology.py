@@ -1,7 +1,7 @@
 """Topology & mixing-matrix properties (Definition 1, Assumption 1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.topology import (
     GRAPHS,

@@ -1,0 +1,159 @@
+"""Round-driver microbenchmark: legacy host loop vs chunked lax.scan.
+
+Runs the quick Fig.-4 setting (§5.1 logreg workload, 10-agent ring, p = 0.1)
+under both drivers with identical specs and batches, twice each with reused
+compiled functions, and writes ``BENCH_driver.json``:
+
+Batches for all rounds are drawn and cached *outside* the timed region (the
+data pipeline is identical for both drivers and is not what a round driver
+changes), so ``per_round_s`` isolates the driver's own per-round cost:
+
+* ``cold_per_round_s`` — first drive, jit compile included (the scan driver
+  compiles one scan per distinct block length);
+* ``per_round_s``      — best warm drive, compile amortized: dispatch + sync
+  overhead — one device sync per *block* for the scan driver vs three scalar
+  device→host syncs per *round* for the legacy loop.
+
+    PYTHONPATH=src python -m benchmarks.bench_driver
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from benchmarks.common import make_logreg_workload, save_result
+from repro.core import ExperimentSpec, get_algorithm, replicate_params
+from repro.core.driver import drive_loop, drive_scan, make_block_fn, stack_rounds
+from repro.core.compression import make_byte_model
+from repro.core.schedule import make_schedule
+from repro.core.trainer import History
+from repro.data import RoundSampler
+
+
+class _CachedSampler:
+    """Replays pre-drawn batches; memoizes the stacked blocks the scan driver
+    asks for, so warm reps measure pure driver overhead."""
+
+    def __init__(self, sampler, rounds: int):
+        self._batches = {k: sampler(k) for k in range(-1, rounds)}
+        self._blocks = {}
+
+    def __call__(self, k: int):
+        return self._batches[k]
+
+    def sample_block(self, start: int, stop: int):
+        key = (start, stop)
+        if key not in self._blocks:
+            batches = [self._batches[k] for k in range(start, stop)]
+            self._blocks[key] = (
+                stack_rounds([b[0] for b in batches]),
+                stack_rounds([b[1] for b in batches]),
+            )
+        return self._blocks[key]
+
+
+def _drive_reps(driver: str, *, rounds: int, eval_every: int, quick: bool):
+    """Three identical drives over cached batches (fresh schedule each),
+    reusing the jitted round program between them: one cold, two warm."""
+    data, loss_fn, eval_fn, params0 = make_logreg_workload(quick=quick, seed=0)
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=data.n_agents, t_o=1, eta_l=0.5, p=0.1, seed=0,
+        rounds=rounds, eval_every=eval_every, driver=driver,
+    )
+    mixing = spec.make_mixing()
+    bound = get_algorithm(spec.algo).bind(loss_fn, spec.config, mixing)
+    x0 = replicate_params(params0, spec.config.n_agents)
+    if driver == "scan":
+        compiled = {"block_fn": make_block_fn(bound)}
+        drive = drive_scan
+        extra = {"block_size": spec.block_size}
+    else:
+        gj = jax.jit(bound.gossip_round)
+        sj = jax.jit(bound.global_round)
+        compiled = {"round_fns": (gj, sj)}
+        drive = drive_loop
+        extra = {}
+
+    sampler = _CachedSampler(
+        RoundSampler(data, batch_size=256, t_o=1, seed=0), rounds
+    )
+    out = []
+    for _rep in range(3):
+        # fresh identically-seeded schedule per rep; replace() keeps the
+        # round-fn objects (and their jit cache) intact
+        b = dataclasses.replace(
+            bound, schedule=make_schedule(spec.config.p, spec.config.seed)
+        )
+        _, comm0 = sampler(-1)
+        state = b.init(loss_fn, x0, comm0)
+        hist = History(
+            byte_model=make_byte_model(
+                mixing, x0, spec.config.n_agents,
+                mixes_per_round=b.comm.mixes_per_round,
+                server_payloads=b.comm.server_payloads,
+            )
+        )
+        t0 = time.perf_counter()
+        state = drive(
+            b, state, sampler, rounds, hist,
+            eval_fn=eval_fn, eval_every=eval_every, **extra, **compiled,
+        )
+        hist.wall_time_s = time.perf_counter() - t0
+        hist.final_state = state
+        out.append(hist)
+    return out
+
+
+def run(quick: bool = True) -> dict:
+    rounds = 150 if quick else 600
+    eval_every = 25 if quick else 50
+    results = {}
+    for driver in ("loop", "scan"):
+        cold, *warms = _drive_reps(
+            driver, rounds=rounds, eval_every=eval_every, quick=quick
+        )
+        warm = min(warms, key=lambda h: h.wall_time_s)
+        results[driver] = {
+            "driver": driver,
+            "rounds": rounds,
+            "eval_every": eval_every,
+            "cold_per_round_s": cold.wall_time_s / rounds,
+            "per_round_s": warm.wall_time_s / rounds,
+            "final_loss": warm.loss[-1],
+            "a2a_rounds": warm.accountant.agent_to_agent,
+            "a2s_rounds": warm.accountant.agent_to_server,
+        }
+    speedup = results["loop"]["per_round_s"] / max(
+        results["scan"]["per_round_s"], 1e-12
+    )
+    payload = {
+        "bench": "driver",
+        "quick": quick,
+        "results": results,
+        "speedup": speedup,
+        "cold_speedup": results["loop"]["cold_per_round_s"]
+        / max(results["scan"]["cold_per_round_s"], 1e-12),
+    }
+    save_result("BENCH_driver", payload)
+    return payload
+
+
+def main() -> None:
+    payload = run(quick=True)
+    for d in ("loop", "scan"):
+        r = payload["results"][d]
+        print(
+            f"{d}:  cold {r['cold_per_round_s']*1e3:7.2f} ms/round | "
+            f"warm {r['per_round_s']*1e3:7.2f} ms/round  "
+            f"(loss {r['final_loss']:.4f})"
+        )
+    print(
+        f"scan speedup: {payload['speedup']:.2f}x warm, "
+        f"{payload['cold_speedup']:.2f}x cold"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -11,13 +11,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    PiscoConfig,
+    Experiment,
+    ExperimentSpec,
     compress_mixing,
     dense_mixing,
     make_compressor,
     make_topology,
-    replicate_params,
-    run_training,
 )
 from repro.data import FederatedDataset, RoundSampler
 from repro.models import simple as S
@@ -80,22 +79,44 @@ def run_pisco_variant(
     topo_kwargs: Optional[dict] = None,
     compression: Optional[str] = None,
     error_feedback: bool = True,
+    driver: str = "scan",
 ):
-    n = data.n_agents
-    cfg = PiscoConfig(n_agents=n, t_o=t_o, eta_l=eta_l, eta_c=eta_c, p=p, seed=seed)
-    topo = make_topology(topology_name, n, **(topo_kwargs or {}))
+    spec = ExperimentSpec.create(
+        algo=algo,
+        n_agents=data.n_agents,
+        t_o=t_o,
+        eta_l=eta_l,
+        eta_c=eta_c,
+        p=p,
+        seed=seed,
+        topology=topology_name,
+        topology_kwargs=topo_kwargs or {},
+        compression=compression,
+        error_feedback=error_feedback,
+        rounds=rounds,
+        eval_every=eval_every,
+        driver=driver,
+    )
+    # build the topology once: the returned topo is the one trained on
+    topo = make_topology(topology_name, data.n_agents, **(topo_kwargs or {}))
     mixing = dense_mixing(topo)
     if compression is not None:
         mixing = compress_mixing(
             mixing, make_compressor(compression),
             error_feedback=error_feedback, seed=seed,
         )
-    sampler = RoundSampler(data, batch_size=min(batch, data.samples_per_agent), t_o=t_o, seed=seed)
-    x0 = replicate_params(params0, n)
-    hist = run_training(
-        algo, loss_fn, x0, cfg, mixing, sampler,
-        rounds=rounds, eval_fn=eval_fn, eval_every=eval_every,
+    b = min(batch, data.samples_per_agent)
+    exp = Experiment(
+        spec,
+        loss_fn=loss_fn,
+        params0=params0,
+        sampler_factory=lambda s: RoundSampler(
+            data, batch_size=b, t_o=s.config.t_o, seed=s.config.seed
+        ),
+        eval_fn=eval_fn,
+        mixing=mixing,
     )
+    hist = exp.run()
     return hist, topo
 
 

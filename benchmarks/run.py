@@ -16,16 +16,31 @@ def _row(name: str, seconds: float, derived: str) -> None:
     print(f"{name},{seconds:.2f},{derived}")
 
 
+# Every figure/table this harness knows how to run.  "ablation" and "driver"
+# are opt-in (not part of the default sweep).
+KNOWN = (
+    "fig4", "fig5", "fig6", "fig7", "table2", "roofline", "compression",
+    "ablation", "driver",
+)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale settings")
     ap.add_argument(
         "--only", nargs="*", default=None,
-        help="subset: fig4 fig5 fig6 fig7 table2 roofline compression",
+        help=f"subset of: {' '.join(KNOWN)}",
     )
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only) if args.only else None
+    if only is not None:
+        unknown = only - set(KNOWN)
+        if unknown:
+            ap.error(
+                f"unknown figure name(s): {' '.join(sorted(unknown))}; "
+                f"choose from: {' '.join(KNOWN)}"
+            )
 
     print("name,seconds,derived")
 
@@ -121,6 +136,17 @@ def main() -> None:
             (v["final_grad_sq"] for v in payload["results"].values()),
         )
         _row("ablation_eta_c", time.perf_counter() - t0, f"best_grad_sq={best:.2e}")
+
+    if only is not None and "driver" in only:
+        from benchmarks import bench_driver
+
+        t0 = time.perf_counter()
+        payload = bench_driver.run(quick=quick)
+        _row(
+            "bench_driver",
+            time.perf_counter() - t0,
+            f"scan_speedup={payload['speedup']:.2f}x",
+        )
 
     if only is None or "roofline" in only:
         from benchmarks import roofline

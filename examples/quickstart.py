@@ -1,7 +1,9 @@
-"""Quickstart: PISCO in ~60 lines.
+"""Quickstart: PISCO through the ExperimentSpec API in ~50 lines.
 
 Federated nonconvex logistic regression over a ring of 10 agents with a
 probabilistic server (p = 0.1), gradient tracking, and T_o = 5 local updates.
+The spec is declarative (dict/JSON round-trippable); the run executes through
+the chunked on-device scan driver.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +11,7 @@ import functools
 
 import jax.numpy as jnp
 
-from repro.core import PiscoConfig, dense_mixing, make_topology, replicate_params, run_training
+from repro.core import Experiment, ExperimentSpec
 from repro.data import FederatedDataset, RoundSampler
 from repro.data.synthetic import synthetic_a9a
 from repro.models.simple import logreg_accuracy, logreg_loss
@@ -20,17 +22,16 @@ def main():
     x, y = synthetic_a9a(8000, seed=0)
     data = FederatedDataset.from_arrays(x, y, n_agents=10, heterogeneous=True)
 
-    # 2. Semi-decentralized network: ring gossip + server w.p. p
-    topo = make_topology("ring", 10)
-    mixing = dense_mixing(topo)
-    cfg = PiscoConfig(n_agents=10, t_o=5, eta_l=0.3, eta_c=1.0, p=0.1, seed=0)
-    print(f"ring lambda_w={topo.lambda_w:.3f}  expected lambda_p={topo.expected_rate(cfg.p):.3f}")
+    # 2. One declarative spec: algorithm (any registry entry), topology,
+    #    PiscoConfig, round budget, eval policy, driver.
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=10, t_o=5, eta_l=0.3, eta_c=1.0, p=0.1, seed=0,
+        topology="ring", rounds=100, eval_every=10, driver="scan",
+    )
+    print("spec:", spec.to_json())
 
-    # 3. Train
+    # 3. Bind the problem pieces and run
     loss_fn = functools.partial(logreg_loss, rho=0.01)
-    sampler = RoundSampler(data, batch_size=128, t_o=cfg.t_o)
-    x0 = replicate_params({"w": jnp.zeros(x.shape[1])}, cfg.n_agents)
-
     x_all = jnp.asarray(data.x_train.reshape(-1, data.x_train.shape[-1]))
     y_all = jnp.asarray(data.y_train.reshape(-1))
 
@@ -40,10 +41,16 @@ def main():
         gl = loss_fn(params, (x_all, y_all))
         return {"test_acc": float(acc), "global_loss": float(gl)}
 
-    hist = run_training(
-        "pisco", loss_fn, x0, cfg, mixing, sampler,
-        rounds=100, eval_fn=eval_fn, eval_every=10,
+    exp = Experiment(
+        spec,
+        loss_fn=loss_fn,
+        params0={"w": jnp.zeros(x.shape[1])},
+        sampler_factory=lambda s: RoundSampler(
+            data, batch_size=128, t_o=s.config.t_o, seed=s.config.seed
+        ),
+        eval_fn=eval_fn,
     )
+    hist = exp.run()
 
     # 4. Report
     print(
@@ -55,6 +62,12 @@ def main():
         f"communication: {hist.accountant.agent_to_agent} cheap gossip rounds, "
         f"{hist.accountant.agent_to_server} server rounds"
     )
+
+    # 5. Multi-seed confidence, vmapped on-device: every seed advances through
+    #    one scanned program.
+    hists = exp.sweep(seeds=[0, 1, 2])
+    accs = [h.eval_metrics[-1]["test_acc"] for h in hists]
+    print(f"3-seed test acc: {min(accs):.3f} .. {max(accs):.3f}")
 
 
 if __name__ == "__main__":

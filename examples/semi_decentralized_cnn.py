@@ -1,5 +1,6 @@
 """The paper's Fig. 7 workload as a runnable example: CNN on a sorted
-(CIFAR-like) split over a 5-agent ring, comparing p in {0, 0.2, 1}.
+(CIFAR-like) split over a 5-agent ring, comparing p in {0, 0.2, 1} with one
+declarative grid sweep over the ExperimentSpec API.
 
     PYTHONPATH=src python examples/semi_decentralized_cnn.py --rounds 40
 """
@@ -8,7 +9,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core import PiscoConfig, dense_mixing, make_topology, replicate_params, run_training
+from repro.core import Experiment, ExperimentSpec
 from repro.data import FederatedDataset, RoundSampler
 from repro.data.synthetic import synthetic_cifar
 from repro.models.simple import cnn_accuracy, cnn_init, cnn_loss
@@ -22,25 +23,30 @@ def main():
 
     x, y = synthetic_cifar(3000, seed=0)
     data = FederatedDataset.from_arrays(x, y, 5, heterogeneous=True)
-    topo = make_topology("ring", 5)
-    mixing = dense_mixing(topo)
     xe, ye = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
 
     def eval_fn(params):
         return {"test_acc": float(cnn_accuracy(params, xe, ye))}
 
-    print(f"5-agent ring (lambda_w={topo.lambda_w:.3f}), sorted CIFAR-like split, "
-          f"T_o={args.t_o}")
-    for p in (0.0, 0.2, 1.0):
-        cfg = PiscoConfig(n_agents=5, t_o=args.t_o, eta_l=0.05, eta_c=1.0, p=p, seed=0)
-        sampler = RoundSampler(data, batch_size=20, t_o=args.t_o, seed=0)
-        x0 = replicate_params(cnn_init(jax.random.PRNGKey(0)), 5)
-        hist = run_training(
-            "pisco", cnn_loss, x0, cfg, mixing, sampler,
-            rounds=args.rounds, eval_fn=eval_fn, eval_every=max(1, args.rounds // 8),
-        )
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=5, t_o=args.t_o, eta_l=0.05, eta_c=1.0, p=0.0,
+        seed=0, topology="ring", rounds=args.rounds,
+        eval_every=max(1, args.rounds // 8), driver="scan",
+    )
+    exp = Experiment(
+        spec,
+        loss_fn=cnn_loss,
+        params0=cnn_init(jax.random.PRNGKey(0)),
+        sampler_factory=lambda s: RoundSampler(
+            data, batch_size=20, t_o=s.config.t_o, seed=s.config.seed
+        ),
+        eval_fn=eval_fn,
+    )
+
+    print(f"5-agent ring, sorted CIFAR-like split, T_o={args.t_o}")
+    for run_spec, hist in exp.sweep(grid={"p": [0.0, 0.2, 1.0]}):
         print(
-            f"  p={p:4.1f}: loss {hist.loss[0]:.3f} -> {hist.loss[-1]:.3f}, "
+            f"  p={run_spec.config.p:4.1f}: loss {hist.loss[0]:.3f} -> {hist.loss[-1]:.3f}, "
             f"test acc {hist.eval_metrics[-1]['test_acc']:.3f} "
             f"({hist.accountant.agent_to_server} server rounds)"
         )

@@ -21,8 +21,9 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.core import PiscoConfig, dense_mixing, make_topology, replicate_params
-from repro.core.pisco import init_state, make_round_fn
-from repro.core.schedule import CommAccountant, make_schedule
+from repro.core.algorithms import get_algorithm
+from repro.core.driver import make_block_fn, predraw_schedule, sample_block
+from repro.core.schedule import CommAccountant
 from repro.data.synthetic import synthetic_lm_tokens
 from repro.models import ModelConfig, get_bundle
 
@@ -88,32 +89,39 @@ def main():
     )
     topo = make_topology("ring", args.n_agents)
     mixing = dense_mixing(topo)
-    gossip = jax.jit(make_round_fn(bundle.loss, pcfg, mixing, global_round=False))
-    srv = jax.jit(make_round_fn(bundle.loss, pcfg, mixing, global_round=True))
-    schedule = make_schedule(args.p, 0)
+    # Registry API: one bound algorithm (round fns + Bernoulli(p) schedule +
+    # comm profile), one jitted scan over each block of rounds.
+    bound = get_algorithm("pisco").bind(bundle.loss, pcfg, mixing)
+    block_fn = make_block_fn(bound)
     acct = CommAccountant()
 
     params = bundle.init(jax.random.PRNGKey(0))
     x0 = replicate_params(params, args.n_agents)
     local0, comm0 = sample_round(-1)
-    state = init_state(bundle.loss, x0, comm0)
+    state = bound.init(bundle.loss, x0, comm0)
 
     losses = []
     t0 = time.perf_counter()
-    for k in range(args.rounds):
-        local, comm = sample_round(k)
-        is_global = schedule(k)
-        acct.record(is_global)
-        state, metrics = (srv if is_global else gossip)(state, local, comm)
-        losses.append(float(metrics.loss))
-        if k % args.log_every == 0 or k == args.rounds - 1:
-            dt = time.perf_counter() - t0
-            print(
-                f"round {k:4d} [{'J' if is_global else 'W'}] loss={losses[-1]:.4f} "
-                f"consensus={float(metrics.consensus_err):.2e} ({dt/(k+1):.1f}s/round)"
-            )
-        if args.ckpt_dir and (k + 1) % 100 == 0:
-            save_checkpoint(args.ckpt_dir, k + 1, state)
+    k = 0
+    while k < args.rounds:
+        # blocks end at log points and checkpoint multiples
+        stop = min(k + args.log_every, args.rounds)
+        if args.ckpt_dir:
+            stop = min(stop, ((k // 100) + 1) * 100)
+        flags = predraw_schedule(bound.schedule, k, stop)
+        local, comm = sample_block(sample_round, k, stop)
+        state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
+        for f in flags:
+            acct.record(bool(f))
+        losses.extend(np.asarray(metrics.loss, dtype=np.float64).tolist())
+        dt = time.perf_counter() - t0
+        print(
+            f"round {stop - 1:4d} [{'J' if flags[-1] else 'W'}] loss={losses[-1]:.4f} "
+            f"consensus={float(metrics.consensus_err[-1]):.2e} ({dt/stop:.1f}s/round)"
+        )
+        if args.ckpt_dir and stop % 100 == 0:
+            save_checkpoint(args.ckpt_dir, stop, state)
+        k = stop
 
     print(
         f"\nfinal: loss {losses[0]:.4f} -> {losses[-1]:.4f} over {args.rounds} rounds "

@@ -48,8 +48,23 @@ from repro.core.compression import (
     message_bytes,
 )
 from repro.core.trainer import History, run_training, make_algorithm_round_fns
+from repro.core.algorithms import (
+    Algorithm,
+    BoundAlgorithm,
+    CommProfile,
+    get_algorithm,
+    register_algorithm,
+    registered_algorithms,
+    unregister_algorithm,
+)
+from repro.core.driver import drive_loop, drive_scan, make_block_fn
+from repro.core.experiment import Experiment, ExperimentSpec, run_experiment
 
 __all__ = [
+    "Algorithm", "BoundAlgorithm", "CommProfile", "get_algorithm",
+    "register_algorithm", "registered_algorithms", "unregister_algorithm",
+    "drive_loop", "drive_scan", "make_block_fn",
+    "Experiment", "ExperimentSpec", "run_experiment",
     "PiscoConfig", "PiscoState", "RoundMetrics", "init_state",
     "init_compression_state", "make_round_fn",
     "make_stacked_value_and_grad", "replicate_params", "decentralized_config",

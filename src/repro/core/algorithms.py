@@ -1,0 +1,324 @@
+"""First-class algorithm registry — the experiment-facing protocol layer.
+
+Every semi-decentralized protocol the repo can train (PISCO and the Table-1/2
+baselines, plus any third-party addition) is one :class:`Algorithm` entry:
+
+* a **builder** closing the round functions over ``(loss_fn, cfg, mixing)``,
+* a declarative **default schedule** (``"bernoulli"`` / ``"never"`` /
+  ``"always"`` / ``"periodic"`` — line 8 of Algorithm 1 and its degenerate
+  cases), and
+* a :class:`CommProfile` pricing the protocol's traffic *as data*: how many
+  mixing invocations a gossip round performs (gradient tracking mixes both the
+  X and Y streams; plain-SGD families mix X only) and how many payloads one
+  server exchange moves per direction (SCAFFOLD ships the model *and* the
+  control variate).
+
+Registering a new protocol is one file anywhere downstream::
+
+    from repro.core.algorithms import BoundAlgorithm, register_algorithm
+
+    @register_algorithm("my_algo", mixes_per_round=1)
+    def _build(spec, loss_fn, cfg, mixing, **_):
+        return my_init, my_gossip_round, my_global_round
+
+— no trainer edits, no byte-model edits, no benchmark edits.  The trainer,
+the :class:`~repro.core.experiment.Experiment` API, and the benchmark harness
+all resolve algorithms exclusively through :func:`get_algorithm`.
+
+Round-function contract (shared with PISCO, see :mod:`repro.core.pisco`)::
+
+    init(loss_fn, x0_stacked, comm_batch0) -> state
+    round_fn(state, local_batches, comm_batch) -> (state, RoundMetrics)
+
+``gossip_round`` and ``global_round`` must return identical pytree
+structures/dtypes — the scan driver dispatches between them with ``lax.cond``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core import baselines as B
+from repro.core.mixing import MixingOps
+from repro.core.pisco import (
+    LossFn,
+    PiscoConfig,
+    init_compression_state,
+    init_state,
+    make_round_fn,
+)
+from repro.core.schedule import PeriodicSchedule, make_schedule
+
+PyTree = Any
+# builder(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0)
+#   -> (init, gossip_round, global_round)
+Builder = Callable[..., Tuple[Callable, Callable, Callable]]
+
+SCHEDULE_KINDS = ("bernoulli", "never", "always", "periodic")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommProfile:
+    """Per-protocol communication cost, priced as data (no byte-model edits).
+
+    ``mixes_per_round``   — mixing invocations per communication round; each
+                            gossip mix moves one message per directed edge.
+    ``server_payloads``   — payloads one agent moves per direction of a server
+                            exchange (model only = 1; model + control variate
+                            or tracking stream = 2).
+    ``server_based``      — every communication round is agent-to-server.
+    ``uses_local_updates``— the protocol consumes the T_o local batches.
+    """
+
+    mixes_per_round: int = 1
+    server_payloads: int = 1
+    server_based: bool = False
+    uses_local_updates: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundAlgorithm:
+    """An :class:`Algorithm` closed over ``(loss_fn, cfg, mixing)`` — what the
+    round drivers actually run."""
+
+    name: str
+    init: Callable[[LossFn, PyTree, Any], Any]
+    gossip_round: Callable
+    global_round: Callable
+    schedule: Callable[[int], bool]
+    comm: CommProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """One registry entry: builder + declarative schedule + comm profile.
+
+    ``avg_period`` (periodic schedules only) is the explicit server-averaging
+    period H used when ``cfg.p == 0`` gives no implied period; Gossip-PGA's
+    documented default is H = 10 [CYZ+21].  When ``cfg.p > 0`` the period is
+    derived as ``round(1/p)`` so a Bernoulli(p) PISCO run and a periodic
+    baseline spend the same expected server budget.
+    """
+
+    name: str
+    build: Builder
+    comm: CommProfile = CommProfile()
+    schedule: str = "bernoulli"
+    avg_period: int = 10
+    description: str = ""
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULE_KINDS:
+            raise ValueError(
+                f"schedule {self.schedule!r} not in {SCHEDULE_KINDS}"
+            )
+
+    def make_default_schedule(self, cfg: PiscoConfig):
+        if self.schedule == "never":
+            return make_schedule(0.0)
+        if self.schedule == "always":
+            return make_schedule(1.0)
+        if self.schedule == "periodic":
+            period = (
+                max(1, int(round(1.0 / cfg.p))) if cfg.p > 0 else self.avg_period
+            )
+            return PeriodicSchedule(period)
+        return make_schedule(cfg.p, cfg.seed)
+
+    def bind(
+        self,
+        loss_fn: LossFn,
+        cfg: PiscoConfig,
+        mixing: MixingOps,
+        *,
+        eta: Optional[float] = None,
+        eta_g: float = 1.0,
+        schedule: Optional[Callable[[int], bool]] = None,
+    ) -> BoundAlgorithm:
+        """Close the algorithm over a concrete problem; ``schedule`` overrides
+        the declarative default (e.g. a replayed flag sequence)."""
+        init, gossip, glob = self.build(
+            self, loss_fn, cfg, mixing, eta=eta, eta_g=eta_g
+        )
+        return BoundAlgorithm(
+            name=self.name,
+            init=init,
+            gossip_round=gossip,
+            global_round=glob,
+            schedule=schedule if schedule is not None else
+            self.make_default_schedule(cfg),
+            comm=self.comm,
+        )
+
+
+_REGISTRY: Dict[str, Algorithm] = {}
+
+
+def register_algorithm(
+    name: str,
+    *,
+    mixes_per_round: int = 1,
+    server_payloads: Optional[int] = None,
+    server_based: bool = False,
+    uses_local_updates: bool = True,
+    schedule: str = "bernoulli",
+    avg_period: int = 10,
+    description: str = "",
+) -> Callable[[Builder], Builder]:
+    """Decorator registering a builder under ``name``.
+
+    ``server_payloads`` defaults to ``mixes_per_round`` — a protocol that
+    mixes two streams over gossip links generally ships both streams through
+    the server too (PISCO/DSGT move X and Y; SCAFFOLD the model and variate).
+    """
+
+    def deco(build: Builder) -> Builder:
+        if name in _REGISTRY:
+            raise ValueError(f"algorithm {name!r} already registered")
+        _REGISTRY[name] = Algorithm(
+            name=name,
+            build=build,
+            comm=CommProfile(
+                mixes_per_round=mixes_per_round,
+                server_payloads=(
+                    mixes_per_round if server_payloads is None else server_payloads
+                ),
+                server_based=server_based,
+                uses_local_updates=uses_local_updates,
+            ),
+            schedule=schedule,
+            avg_period=avg_period,
+            description=description or (build.__doc__ or "").strip(),
+        )
+        return build
+
+    return deco
+
+
+def unregister_algorithm(name: str) -> None:
+    """Remove a registry entry (tests / plugin reload)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_algorithm(name: str) -> Algorithm:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def registered_algorithms() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# The paper's seven protocols, ported onto the registry
+# ---------------------------------------------------------------------------
+
+
+@register_algorithm(
+    "pisco",
+    mixes_per_round=2,
+    description="PISCO (Algorithm 1): tracked local updates + Bernoulli(p) server",
+)
+def _build_pisco(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+    del spec, eta, eta_g
+    return (
+        lambda lf, x0, b0: init_compression_state(init_state(lf, x0, b0), mixing),
+        make_round_fn(loss_fn, cfg, mixing, global_round=False),
+        make_round_fn(loss_fn, cfg, mixing, global_round=True),
+    )
+
+
+@register_algorithm(
+    "periodical_gt",
+    mixes_per_round=2,
+    schedule="never",
+    description="Periodical-GT [LLKS24]: PISCO with p = 0 (gossip every round)",
+)
+def _build_periodical_gt(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+    del spec, eta, eta_g
+    fn = B.make_periodical_gt_round_fn(loss_fn, cfg, mixing)
+    # init_state (not dsgt_init): the round fn carries a PiscoState, and the
+    # scan driver needs the carry pytree type to match it exactly.
+    return init_state, fn, fn
+
+
+@register_algorithm(
+    "dsgt",
+    mixes_per_round=2,
+    uses_local_updates=False,
+    description="DSGT [PN21]: gradient tracking, one step per round",
+)
+def _build_dsgt(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+    del spec, eta_g
+    eta = cfg.eta_l if eta is None else eta
+    return (
+        B.dsgt_init,
+        B.make_dsgt_round_fn(loss_fn, eta, mixing, global_round=False),
+        B.make_dsgt_round_fn(loss_fn, eta, mixing, global_round=True),
+    )
+
+
+@register_algorithm(
+    "dsgd",
+    mixes_per_round=1,
+    uses_local_updates=False,
+    schedule="never",
+    description="DSGD [NO09]: gossip SGD",
+)
+def _build_dsgd(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+    del spec, eta_g
+    eta = cfg.eta_l if eta is None else eta
+    return (
+        B.dsgd_init,
+        B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=False, t_o=cfg.t_o),
+        B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o),
+    )
+
+
+@register_algorithm(
+    "gossip_pga",
+    mixes_per_round=1,
+    uses_local_updates=False,
+    schedule="periodic",
+    avg_period=10,
+    description="Gossip-PGA [CYZ+21]: gossip SGD + periodic global averaging",
+)
+def _build_gossip_pga(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+    del spec, eta_g
+    eta = cfg.eta_l if eta is None else eta
+    return (
+        B.dsgd_init,
+        B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=False, t_o=cfg.t_o),
+        B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o),
+    )
+
+
+@register_algorithm(
+    "fedavg",
+    mixes_per_round=1,
+    server_based=True,
+    schedule="always",
+    description="FedAvg [MMR+17]: local SGD + server averaging every round",
+)
+def _build_fedavg(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+    del spec, eta_g
+    eta = cfg.eta_l if eta is None else eta
+    s = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o)
+    return B.dsgd_init, s, s
+
+
+@register_algorithm(
+    "scaffold",
+    mixes_per_round=2,
+    server_based=True,
+    schedule="always",
+    description="SCAFFOLD [KKM+20]: model + control variate per server exchange",
+)
+def _build_scaffold(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+    del spec, eta
+    fn = B.make_scaffold_round_fn(loss_fn, cfg.eta_l, eta_g, cfg.t_o, mixing)
+    return B.scaffold_init, fn, fn

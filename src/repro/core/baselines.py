@@ -216,7 +216,9 @@ def make_scaffold_round_fn(
 
 
 # ---------------------------------------------------------------------------
-# Registry for the benchmark harness
+# Static baseline descriptors (the runnable registry — builders, schedules,
+# comm-cost profiles — lives in repro.core.algorithms; consistency between
+# the two is asserted in tests/test_registry.py)
 # ---------------------------------------------------------------------------
 
 

@@ -351,22 +351,26 @@ def make_byte_model(
     n_agents: int,
     *,
     mixes_per_round: int = 2,
+    server_payloads: Optional[int] = None,
 ) -> RoundByteModel:
     """Closed-form network-wide bytes per round (Fig.-4 bits-on-x-axis).
 
     * gossip round: ``mixes_per_round`` mixes, each moving one *compressed*
       message per directed edge;
-    * server round: ``mixes_per_round`` mixes, each an upload + a broadcast
-      download per agent, *full precision*.
+    * server round: ``server_payloads`` payloads per direction (defaults to
+      ``mixes_per_round`` — gradient-tracking methods ship both streams), each
+      an upload + a broadcast download per agent, *full precision*.
     """
     comp = mixing.compression.compressor if mixing.compression is not None else None
+    if server_payloads is None:
+        server_payloads = mixes_per_round
     gossip_msg = message_bytes(comp, template, n_agents)
     server_msg = message_bytes(None, template, n_agents)
     return RoundByteModel(
         gossip_round_bytes=mixes_per_round
         * _directed_gossip_messages(mixing)
         * gossip_msg,
-        server_round_bytes=mixes_per_round * 2 * n_agents * server_msg,
+        server_round_bytes=server_payloads * 2 * n_agents * server_msg,
         gossip_message_bytes=gossip_msg,
         server_message_bytes=server_msg,
     )

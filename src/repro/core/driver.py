@@ -1,0 +1,222 @@
+"""Round drivers: how communication rounds get executed on the device.
+
+Two drivers, one contract — fill a :class:`~repro.core.trainer.History` and
+return the final algorithm state:
+
+* **loop** — the legacy per-round Python host loop: one jitted round-function
+  call per round, three scalar device→host syncs per round for the metrics.
+  Simple, and the reference semantics.
+
+* **scan** — chunked ``lax.scan``: the Bernoulli(p) schedule for a *block* of
+  rounds is pre-drawn on the host (identical draws, in round order, to the
+  legacy loop — line 8 of Algorithm 1 is a host-side i.i.d. sequence either
+  way), the block's minibatches are stacked along a new leading axis, and the
+  whole block runs on-device as one ``lax.scan`` whose body dispatches between
+  the gossip and global round functions with ``lax.cond``.  The host touches
+  the device once per block (stacked metrics) instead of three times per
+  round, and blocks are cut exactly at eval boundaries so the eval-at-x̄
+  semantics match the loop round-for-round.
+
+Both drivers duck-type the history object (``loss`` / ``grad_sq_norm`` /
+``consensus_err`` / ``is_global`` lists, ``accountant``, ``byte_model``,
+``eval_metrics``) so this module has no import cycle with the trainer.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import BoundAlgorithm
+
+PyTree = Any
+Sampler = Callable[[int], tuple]
+EvalFn = Callable[[PyTree], Dict[str, float]]
+
+DEFAULT_BLOCK_SIZE = 32
+
+DRIVERS = ("loop", "scan")
+
+
+def predraw_schedule(schedule, start: int, stop: int) -> np.ndarray:
+    """Materialize ``schedule(k)`` for ``k in [start, stop)`` as a bool array.
+
+    Draws happen in round order, so a stateful :class:`BernoulliSchedule`
+    yields the exact flag sequence the legacy loop would have seen."""
+    return np.array([bool(schedule(k)) for k in range(start, stop)], dtype=bool)
+
+
+def stack_rounds(per_round: Sequence[PyTree]) -> PyTree:
+    """Stack a list of per-round batch pytrees along a new leading round axis."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *per_round)
+
+
+def sample_block(sampler: Sampler, start: int, stop: int) -> Tuple[PyTree, PyTree]:
+    """``(local, comm)`` for rounds ``[start, stop)`` with a leading round
+    axis.  Samplers exposing ``sample_block(start, stop)`` (one gather + one
+    device put, e.g. :class:`repro.data.RoundSampler`) take the fast path;
+    anything else falls back to per-round calls + on-device stacking."""
+    fast = getattr(sampler, "sample_block", None)
+    if fast is not None:
+        return fast(start, stop)
+    batches = [sampler(k) for k in range(start, stop)]
+    return (
+        stack_rounds([b[0] for b in batches]),
+        stack_rounds([b[1] for b in batches]),
+    )
+
+
+def block_bounds(
+    rounds: int, *, eval_every: int = 0, block_size: int = DEFAULT_BLOCK_SIZE,
+    start: int = 0,
+) -> List[Tuple[int, int]]:
+    """Split ``[start, rounds)`` into scan blocks.
+
+    Blocks end immediately after every eval round (``k % eval_every == 0`` or
+    ``k == rounds - 1``; ``eval_every <= 0`` disables eval cuts) and never
+    exceed ``block_size`` rounds — the only points where the driver must sync
+    state to the host."""
+    assert block_size >= 1
+    bounds = []
+    k = start
+    while k < rounds:
+        stop = min(k + block_size, rounds)
+        if eval_every > 0:
+            nxt = k if k % eval_every == 0 else (k // eval_every + 1) * eval_every
+            nxt = min(nxt, rounds - 1)
+            stop = min(stop, nxt + 1)
+        bounds.append((k, stop))
+        k = stop
+    return bounds
+
+
+def make_block_fn(bound: BoundAlgorithm, *, jit: bool = True) -> Callable:
+    """One jitted ``(state, flags, local, comm) -> (state, stacked_metrics)``
+    scanning a block of rounds on-device.
+
+    ``flags`` is the pre-drawn bool vector (block,), ``local``/``comm`` carry
+    the block's batches with a leading round axis.  When the algorithm uses a
+    single round function for both kinds (FedAvg, SCAFFOLD) the ``lax.cond``
+    is elided."""
+    gossip, glob = bound.gossip_round, bound.global_round
+    same = glob is gossip
+
+    def body(state, per_round):
+        flag, local, comm = per_round
+        if same:
+            return gossip(state, local, comm)
+        return jax.lax.cond(flag, glob, gossip, state, local, comm)
+
+    def block_fn(state, flags, local, comm):
+        return jax.lax.scan(body, state, (flags, local, comm))
+
+    return jax.jit(block_fn) if jit else block_fn
+
+
+def _eval_at_xbar(eval_fn: EvalFn, state, k: int) -> Dict[str, float]:
+    x_bar = jax.tree.map(lambda v: jnp.mean(v, axis=0), state.x)
+    return dict(eval_fn(x_bar), round=k)
+
+
+def _record_flags(hist, flags: np.ndarray) -> None:
+    for f in flags:
+        f = bool(f)
+        hist.is_global.append(f)
+        hist.accountant.record(f, hist.byte_model.round_bytes(f))
+
+
+def drive_scan(
+    bound: BoundAlgorithm,
+    state,
+    sampler: Sampler,
+    rounds: int,
+    hist,
+    *,
+    eval_fn: Optional[EvalFn] = None,
+    eval_every: int = 1,
+    stop_when: Optional[Callable] = None,
+    block_size: int = DEFAULT_BLOCK_SIZE,
+    block_fn: Optional[Callable] = None,
+):
+    """Chunked-scan driver.  ``stop_when`` is consulted at block boundaries
+    (the only host-visible points), so a stop may overshoot by at most one
+    block relative to the legacy loop.  Pass a prebuilt ``block_fn`` (from
+    :func:`make_block_fn`) to reuse its jit cache across drives."""
+    if block_fn is None:
+        block_fn = make_block_fn(bound)
+    cuts = block_bounds(
+        rounds,
+        eval_every=eval_every if eval_fn is not None else 0,
+        block_size=block_size,
+    )
+    for start, stop in cuts:
+        flags = predraw_schedule(bound.schedule, start, stop)
+        local, comm = sample_block(sampler, start, stop)
+        state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
+        # one device->host sync for the whole block
+        hist.loss.extend(np.asarray(metrics.loss, dtype=np.float64).tolist())
+        hist.grad_sq_norm.extend(
+            np.asarray(metrics.grad_sq_norm, dtype=np.float64).tolist()
+        )
+        hist.consensus_err.extend(
+            np.asarray(metrics.consensus_err, dtype=np.float64).tolist()
+        )
+        _record_flags(hist, flags)
+        k_end = stop - 1
+        if eval_fn is not None and (k_end % eval_every == 0 or k_end == rounds - 1):
+            hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k_end))
+        if stop_when is not None and stop_when(hist):
+            break
+    return state
+
+
+def drive_loop(
+    bound: BoundAlgorithm,
+    state,
+    sampler: Sampler,
+    rounds: int,
+    hist,
+    *,
+    eval_fn: Optional[EvalFn] = None,
+    eval_every: int = 1,
+    stop_when: Optional[Callable] = None,
+    jit: bool = True,
+    round_fns: Optional[Tuple[Callable, Callable]] = None,
+):
+    """The legacy per-round host loop (reference semantics).  ``round_fns``
+    supplies prejitted ``(gossip_fn, global_fn)`` to reuse across drives."""
+    if round_fns is not None:
+        gossip_fn, global_fn = round_fns
+    else:
+        gossip_fn, global_fn = bound.gossip_round, bound.global_round
+        if jit:
+            gossip_fn = jax.jit(gossip_fn)
+            global_fn = (
+                jax.jit(global_fn)
+                if global_fn is not bound.gossip_round else gossip_fn
+            )
+    for k in range(rounds):
+        local_batches, comm_batch = sampler(k)
+        is_global = bool(bound.schedule(k))
+        fn = global_fn if is_global else gossip_fn
+        state, metrics = fn(state, local_batches, comm_batch)
+        hist.loss.append(float(metrics.loss))
+        hist.grad_sq_norm.append(float(metrics.grad_sq_norm))
+        hist.consensus_err.append(float(metrics.consensus_err))
+        hist.is_global.append(is_global)
+        hist.accountant.record(is_global, hist.byte_model.round_bytes(is_global))
+        if eval_fn is not None and (k % eval_every == 0 or k == rounds - 1):
+            hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k))
+        if stop_when is not None and stop_when(hist):
+            break
+    return state
+
+
+def get_driver(name: str) -> Callable:
+    if name == "scan":
+        return drive_scan
+    if name == "loop":
+        return drive_loop
+    raise ValueError(f"unknown driver {name!r}; options: {DRIVERS}")

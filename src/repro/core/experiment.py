@@ -1,0 +1,344 @@
+"""Declarative experiments: ``ExperimentSpec`` + ``Experiment``.
+
+An :class:`ExperimentSpec` is a frozen, dict/JSON-round-trippable bundle of
+*what* to run — algorithm name (resolved through the registry), topology,
+compression, :class:`~repro.core.pisco.PiscoConfig`, round budget, eval
+policy, and which round driver executes it.  The *problem* (loss function,
+initial parameters, data sampler, eval function) stays runtime state on
+:class:`Experiment`, because closures and datasets don't belong in JSON.
+
+::
+
+    spec = ExperimentSpec.create(algo="pisco", n_agents=10, t_o=5, p=0.1,
+                                 eta_l=0.3, rounds=100, eval_every=10)
+    exp = Experiment(spec, loss_fn=loss_fn, params0=params0,
+                     sampler_factory=make_sampler, eval_fn=eval_fn)
+    hist = exp.run()                    # -> History
+    hists = exp.sweep(seeds=[0, 1, 2])  # vmapped multi-seed, one device program
+    grid = exp.sweep(grid={"p": [0.0, 0.1, 1.0]})  # list of (spec, History)
+
+Multi-seed sweeps vmap the scanned round block over a leading seed axis —
+every seed advances in lockstep through the *same* realized communication
+schedule (the spec's seed draws it), while data sampling and anything else the
+``sampler_factory`` keys off ``spec.seed`` vary per seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import BoundAlgorithm, get_algorithm
+from repro.core.compression import make_byte_model, make_compressor, compress_mixing
+from repro.core.driver import (
+    DEFAULT_BLOCK_SIZE,
+    DRIVERS,
+    block_bounds,
+    drive_loop,
+    drive_scan,
+    make_block_fn,
+    predraw_schedule,
+    sample_block,
+    stack_rounds,
+)
+from repro.core.mixing import MixingOps, dense_mixing
+from repro.core.pisco import LossFn, PiscoConfig, replicate_params
+from repro.core.topology import make_topology
+from repro.core.trainer import History
+
+PyTree = Any
+Sampler = Callable[[int], tuple]
+EvalFn = Callable[[PyTree], Dict[str, float]]
+
+_CONFIG_FIELDS = tuple(f.name for f in dataclasses.fields(PiscoConfig))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """Everything declarative about one training run."""
+
+    algo: str
+    config: PiscoConfig
+    topology: str = "ring"
+    topology_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    compression: Optional[str] = None  # None | "q8" | "q4" | "top0.1" | ...
+    error_feedback: bool = True
+    rounds: int = 100
+    eval_every: int = 1
+    driver: str = "scan"  # "scan" (on-device blocks) | "loop" (legacy)
+    block_size: int = DEFAULT_BLOCK_SIZE
+
+    def __post_init__(self):
+        if self.driver not in DRIVERS:
+            raise ValueError(f"driver {self.driver!r} not in {DRIVERS}")
+        # normalize mapping-typed topology kwargs into sorted item tuples so
+        # specs stay hashable and JSON round-trips are canonical
+        if isinstance(self.topology_kwargs, dict):
+            object.__setattr__(
+                self, "topology_kwargs", tuple(sorted(self.topology_kwargs.items()))
+            )
+        get_algorithm(self.algo)  # fail fast on unknown algorithms
+
+    @classmethod
+    def create(cls, algo: str = "pisco", **kw) -> "ExperimentSpec":
+        """Flat constructor: PiscoConfig fields may be passed directly
+        (``ExperimentSpec.create(algo="pisco", n_agents=10, p=0.1, ...)``)."""
+        cfg_kw = {k: kw.pop(k) for k in list(kw) if k in _CONFIG_FIELDS}
+        return cls(algo=algo, config=PiscoConfig(**cfg_kw), **kw)
+
+    def replace(self, **kw) -> "ExperimentSpec":
+        """`dataclasses.replace` that also routes PiscoConfig field names
+        (``spec.replace(p=0.3)``) into the nested config."""
+        cfg_kw = {k: kw.pop(k) for k in list(kw) if k in _CONFIG_FIELDS}
+        spec = self
+        if cfg_kw:
+            spec = dataclasses.replace(
+                spec, config=dataclasses.replace(spec.config, **cfg_kw)
+            )
+        return dataclasses.replace(spec, **kw) if kw else spec
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["topology_kwargs"] = dict(self.topology_kwargs)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        d = dict(d)
+        d["config"] = PiscoConfig(**d["config"])
+        d["topology_kwargs"] = tuple(sorted(dict(d.get("topology_kwargs", {})).items()))
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+    # -- derived pieces -----------------------------------------------------
+
+    def make_mixing(self) -> MixingOps:
+        topo = make_topology(
+            self.topology, self.config.n_agents, **dict(self.topology_kwargs)
+        )
+        mixing = dense_mixing(topo)
+        if self.compression is not None:
+            mixing = compress_mixing(
+                mixing,
+                make_compressor(self.compression),
+                error_feedback=self.error_feedback,
+                seed=self.config.seed,
+            )
+        return mixing
+
+
+class Experiment:
+    """A spec plus the runtime problem pieces; ``run()`` produces a History.
+
+    ``sampler_factory(spec)`` builds a fresh per-round sampler for a spec (the
+    hook multi-seed sweeps use); a plain ``sampler`` works for single runs.
+    ``mixing`` overrides the spec-derived dense mixer — the hook the launcher
+    uses to swap in collective (shard_map) mixers.
+    """
+
+    def __init__(
+        self,
+        spec: ExperimentSpec,
+        *,
+        loss_fn: LossFn,
+        params0: Optional[PyTree] = None,
+        x0: Optional[PyTree] = None,
+        sampler: Optional[Sampler] = None,
+        sampler_factory: Optional[Callable[[ExperimentSpec], Sampler]] = None,
+        eval_fn: Optional[EvalFn] = None,
+        mixing: Optional[MixingOps] = None,
+        stop_when: Optional[Callable[[History], bool]] = None,
+    ):
+        if (params0 is None) == (x0 is None):
+            raise ValueError("pass exactly one of params0 (unstacked) or x0 (stacked)")
+        if (sampler is None) == (sampler_factory is None):
+            raise ValueError("pass exactly one of sampler or sampler_factory")
+        self.spec = spec
+        self.loss_fn = loss_fn
+        self._params0 = params0
+        self._x0 = x0
+        self._sampler = sampler
+        self._sampler_factory = sampler_factory
+        self.eval_fn = eval_fn
+        self._mixing = mixing
+        self.stop_when = stop_when
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _pieces(self) -> dict:
+        return dict(
+            loss_fn=self.loss_fn,
+            params0=self._params0,
+            x0=self._x0,
+            sampler=self._sampler,
+            sampler_factory=self._sampler_factory,
+            eval_fn=self.eval_fn,
+            mixing=self._mixing,
+            stop_when=self.stop_when,
+        )
+
+    def _make_sampler(self, spec: ExperimentSpec) -> Sampler:
+        if self._sampler_factory is not None:
+            return self._sampler_factory(spec)
+        return self._sampler
+
+    def _x0_stacked(self) -> PyTree:
+        if self._x0 is not None:
+            return self._x0
+        return replicate_params(self._params0, self.spec.config.n_agents)
+
+    def _bind(self, mixing: MixingOps) -> BoundAlgorithm:
+        return get_algorithm(self.spec.algo).bind(
+            self.loss_fn, self.spec.config, mixing
+        )
+
+    def _fresh_history(self, mixing: MixingOps, bound: BoundAlgorithm) -> History:
+        return History(
+            byte_model=make_byte_model(
+                mixing,
+                self._x0_stacked(),
+                self.spec.config.n_agents,
+                mixes_per_round=bound.comm.mixes_per_round,
+                server_payloads=bound.comm.server_payloads,
+            )
+        )
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self) -> History:
+        spec = self.spec
+        mixing = self._mixing if self._mixing is not None else spec.make_mixing()
+        bound = self._bind(mixing)
+        sampler = self._make_sampler(spec)
+        _, comm0 = sampler(-1)
+        state = bound.init(self.loss_fn, self._x0_stacked(), comm0)
+        hist = self._fresh_history(mixing, bound)
+        drive = drive_scan if spec.driver == "scan" else drive_loop
+        kw = {"block_size": spec.block_size} if spec.driver == "scan" else {}
+        t0 = time.perf_counter()
+        state = drive(
+            bound, state, sampler, spec.rounds, hist,
+            eval_fn=self.eval_fn, eval_every=spec.eval_every,
+            stop_when=self.stop_when, **kw,
+        )
+        hist.wall_time_s = time.perf_counter() - t0
+        hist.final_state = state
+        return hist
+
+    def sweep(
+        self,
+        seeds: Optional[Sequence[int]] = None,
+        grid: Optional[Dict[str, Sequence[Any]]] = None,
+    ):
+        """Either a vmapped multi-seed run (``seeds=[...]`` -> list of History,
+        one per seed, all seeds advanced on-device in one scanned program) or a
+        sequential hyper-parameter grid (``grid={"p": [...], ...}`` -> list of
+        ``(spec, History)`` over the cartesian product)."""
+        if (seeds is None) == (grid is None):
+            raise ValueError("pass exactly one of seeds or grid")
+        if grid is not None:
+            out = []
+            for combo in itertools.product(*grid.values()):
+                spec = self.spec.replace(**dict(zip(grid.keys(), combo)))
+                out.append((spec, Experiment(spec, **self._pieces()).run()))
+            return out
+        return self._sweep_seeds(list(seeds))
+
+    def _sweep_seeds(self, seeds: List[int]) -> List[History]:
+        if self._sampler_factory is None:
+            raise ValueError("sweep(seeds=...) needs a sampler_factory")
+        spec = self.spec
+        n_seeds = len(seeds)
+        mixing = self._mixing if self._mixing is not None else spec.make_mixing()
+        bound = self._bind(mixing)
+        samplers = [self._make_sampler(spec.replace(seed=s)) for s in seeds]
+
+        def stacked_sampler(k: int):
+            batches = [s(k) for s in samplers]
+            return (
+                stack_rounds([b[0] for b in batches]),
+                stack_rounds([b[1] for b in batches]),
+            )
+
+        # Seed axis in front of everything the round functions touch: states
+        # and batches are vmapped, the schedule flag broadcasts.
+        x0 = self._x0_stacked()
+        x0_s = jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (n_seeds,) + v.shape), x0
+        )
+        _, comm0 = stacked_sampler(-1)
+        state = jax.vmap(lambda x, b: bound.init(self.loss_fn, x, b))(x0_s, comm0)
+        same = bound.global_round is bound.gossip_round
+        vgossip = jax.vmap(bound.gossip_round)
+        vbound = dataclasses.replace(
+            bound,
+            gossip_round=vgossip,
+            global_round=vgossip if same else jax.vmap(bound.global_round),
+        )
+        block_fn = make_block_fn(vbound)
+
+        hists = [self._fresh_history(mixing, bound) for _ in seeds]
+        t0 = time.perf_counter()
+        cuts = block_bounds(
+            spec.rounds,
+            eval_every=spec.eval_every if self.eval_fn is not None else 0,
+            block_size=spec.block_size,
+        )
+        for start, stop in cuts:
+            flags = predraw_schedule(bound.schedule, start, stop)
+            per_seed = [sample_block(s, start, stop) for s in samplers]
+            # (block, seeds, ...) — round axis scans, seed axis vmaps
+            local = jax.tree.map(
+                lambda *ls: jnp.stack(ls, axis=1), *[b[0] for b in per_seed]
+            )
+            comm = jax.tree.map(
+                lambda *ls: jnp.stack(ls, axis=1), *[b[1] for b in per_seed]
+            )
+            state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
+            loss = np.asarray(metrics.loss, dtype=np.float64)  # (block, seeds)
+            gsq = np.asarray(metrics.grad_sq_norm, dtype=np.float64)
+            cerr = np.asarray(metrics.consensus_err, dtype=np.float64)
+            k_end = stop - 1
+            do_eval = self.eval_fn is not None and (
+                k_end % spec.eval_every == 0 or k_end == spec.rounds - 1
+            )
+            for i, hist in enumerate(hists):
+                hist.loss.extend(loss[:, i].tolist())
+                hist.grad_sq_norm.extend(gsq[:, i].tolist())
+                hist.consensus_err.extend(cerr[:, i].tolist())
+                for f in flags:
+                    hist.is_global.append(bool(f))
+                    hist.accountant.record(
+                        bool(f), hist.byte_model.round_bytes(bool(f))
+                    )
+                if do_eval:
+                    x_bar = jax.tree.map(
+                        lambda v: jnp.mean(v[i], axis=0), state.x
+                    )
+                    hist.eval_metrics.append(
+                        dict(self.eval_fn(x_bar), round=k_end)
+                    )
+        wall = time.perf_counter() - t0
+        for i, hist in enumerate(hists):
+            hist.wall_time_s = wall
+            hist.final_state = jax.tree.map(lambda v: v[i], state)
+        return hists
+
+
+def run_experiment(spec: ExperimentSpec, **pieces) -> History:
+    """One-shot convenience: ``run_experiment(spec, loss_fn=..., ...)``."""
+    return Experiment(spec, **pieces).run()

@@ -1,13 +1,17 @@
-"""Host-side training loop driving PISCO or any baseline.
+"""History record + the deprecated ``run_training`` entry point.
 
-The loop owns exactly the things the paper leaves to "the system":
+The experiment-facing API now lives in three places:
 
-* the Bernoulli(p) / periodic schedule (line 8 of Algorithm 1),
-* dispatch between the two pre-compiled round functions (gossip vs global),
-* data sampling for the T_o + 1 minibatches each round consumes,
-* communication-cost accounting (agent-to-agent vs agent-to-server rounds),
-* evaluation at the agent-average parameters x̄ (the paper's metrics:
-  running mean of ||∇f(x̄^k)||² and test accuracy).
+* :mod:`repro.core.algorithms` — the :class:`Algorithm` registry (what to run:
+  round functions, default schedule, comm-cost profile — all data),
+* :mod:`repro.core.driver`     — the round drivers (how to run it: chunked
+  ``lax.scan`` on-device, or the legacy per-round host loop),
+* :mod:`repro.core.experiment` — :class:`ExperimentSpec` / :class:`Experiment`
+  (declarative bundles, ``run()`` / ``sweep()``).
+
+``run_training`` and ``make_algorithm_round_fns`` remain as thin shims over
+the registry so pre-registry callers keep working unchanged; new code should
+construct an :class:`~repro.core.experiment.Experiment`.
 """
 from __future__ import annotations
 
@@ -15,40 +19,20 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.core.algorithms import get_algorithm
 from repro.core.compression import make_byte_model
+from repro.core.driver import drive_loop, drive_scan
 from repro.core.mixing import MixingOps
-from repro.core.pisco import (
-    LossFn,
-    PiscoConfig,
-    init_compression_state,
-    init_state,
-    make_round_fn,
-)
-from repro.core.schedule import CommAccountant, RoundByteModel, make_schedule
-from repro.core import baselines as B
+from repro.core.pisco import LossFn, PiscoConfig
+from repro.core.schedule import CommAccountant, RoundByteModel
 
 PyTree = Any
 # sampler(round_idx) -> (local_batches [T_o, A, ...], comm_batch [A, ...])
 Sampler = Callable[[int], tuple]
 # eval_fn(x_bar) -> dict of python floats
 EvalFn = Callable[[PyTree], Dict[str, float]]
-
-# Mixing invocations per communication round, for the byte model: gradient
-# tracking mixes both X and Y; plain-SGD families mix X only.  SCAFFOLD's
-# server exchange moves the model plus the control variate (2 payloads).
-MIXES_PER_ROUND = {
-    "pisco": 2,
-    "dsgt": 2,
-    "periodical_gt": 2,
-    "dsgd": 1,
-    "gossip_pga": 1,
-    "fedavg": 1,
-    "scaffold": 2,
-}
 
 
 @dataclasses.dataclass
@@ -63,6 +47,9 @@ class History:
     accountant: CommAccountant = dataclasses.field(default_factory=CommAccountant)
     byte_model: Optional[RoundByteModel] = None
     wall_time_s: float = 0.0
+    # Final algorithm state (agent-stacked pytree NamedTuple), set by the
+    # drivers when the run completes.  Excluded from to_dict().
+    final_state: Any = None
 
     def running_mean_eval(self, key: str) -> np.ndarray:
         vals = np.array([m[key] for m in self.eval_metrics], dtype=np.float64)
@@ -86,6 +73,38 @@ class History:
             raise ValueError(mode)
         return int(hits[0]) if hits.size else None
 
+    def to_dict(self) -> dict:
+        """JSON-serializable view for the benchmark writers (``final_state``
+        is device data and is deliberately left out)."""
+
+        def native(v):
+            # numpy scalars -> python; python int/bool/float/str pass through
+            # unchanged (the 'round' index stays an int)
+            if isinstance(v, np.bool_):
+                return bool(v)
+            if isinstance(v, np.integer):
+                return int(v)
+            if isinstance(v, np.floating):
+                return float(v)
+            return v
+
+        return {
+            "loss": [float(v) for v in self.loss],
+            "grad_sq_norm": [float(v) for v in self.grad_sq_norm],
+            "consensus_err": [float(v) for v in self.consensus_err],
+            "is_global": [bool(v) for v in self.is_global],
+            "eval_metrics": [
+                {k: native(v) for k, v in m.items()} for m in self.eval_metrics
+            ],
+            "accountant": dataclasses.asdict(self.accountant),
+            "byte_model": (
+                dataclasses.asdict(self.byte_model)
+                if self.byte_model is not None
+                else None
+            ),
+            "wall_time_s": float(self.wall_time_s),
+        }
+
 
 def make_algorithm_round_fns(
     algo: str,
@@ -96,40 +115,11 @@ def make_algorithm_round_fns(
     eta: Optional[float] = None,
     eta_g: float = 1.0,
 ) -> tuple:
-    """Return (init_fn, gossip_round_fn, global_round_fn, schedule)."""
-    eta = eta if eta is not None else cfg.eta_l
-    if algo == "pisco":
-        return (
-            lambda lf, x0, b0: init_compression_state(init_state(lf, x0, b0), mixing),
-            make_round_fn(loss_fn, cfg, mixing, global_round=False),
-            make_round_fn(loss_fn, cfg, mixing, global_round=True),
-            make_schedule(cfg.p, cfg.seed),
-        )
-    if algo == "periodical_gt":
-        fn = B.make_periodical_gt_round_fn(loss_fn, cfg, mixing)
-        return (B.dsgt_init, fn, fn, make_schedule(0.0))
-    if algo == "dsgt":
-        g = B.make_dsgt_round_fn(loss_fn, eta, mixing, global_round=False)
-        s = B.make_dsgt_round_fn(loss_fn, eta, mixing, global_round=True)
-        return (B.dsgt_init, g, s, make_schedule(cfg.p, cfg.seed))
-    if algo == "dsgd":
-        g = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=False, t_o=cfg.t_o)
-        s = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o)
-        return (B.dsgd_init, g, s, make_schedule(0.0))
-    if algo == "gossip_pga":
-        from repro.core.schedule import PeriodicSchedule
-
-        g = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=False, t_o=cfg.t_o)
-        s = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o)
-        period = max(1, int(round(1.0 / cfg.p))) if cfg.p > 0 else 10
-        return (B.dsgd_init, g, s, PeriodicSchedule(period))
-    if algo == "fedavg":
-        s = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o)
-        return (B.dsgd_init, s, s, make_schedule(1.0))
-    if algo == "scaffold":
-        fn = B.make_scaffold_round_fn(loss_fn, cfg.eta_l, eta_g, cfg.t_o, mixing)
-        return (B.scaffold_init, fn, fn, make_schedule(1.0))
-    raise ValueError(f"unknown algorithm {algo!r}; options: {sorted(B.BASELINES)}")
+    """Deprecated shim over the registry: returns
+    ``(init_fn, gossip_round_fn, global_round_fn, schedule)``.  Prefer
+    ``get_algorithm(algo).bind(loss_fn, cfg, mixing)``."""
+    bound = get_algorithm(algo).bind(loss_fn, cfg, mixing, eta=eta, eta_g=eta_g)
+    return bound.init, bound.gossip_round, bound.global_round, bound.schedule
 
 
 def run_training(
@@ -145,41 +135,39 @@ def run_training(
     eval_every: int = 1,
     stop_when: Optional[Callable[[History], bool]] = None,
     jit: bool = True,
+    driver: str = "loop",
+    block_size: int = 32,
 ) -> History:
-    """Drive ``rounds`` communication rounds of ``algo``; returns History."""
-    init_fn, gossip_fn, global_fn, schedule = make_algorithm_round_fns(
-        algo, loss_fn, cfg, mixing
-    )
-    if jit:
-        gossip_fn = jax.jit(gossip_fn)
-        global_fn = jax.jit(global_fn) if global_fn is not gossip_fn else gossip_fn
+    """Deprecated shim: drive ``rounds`` communication rounds of ``algo``.
 
-    local0, comm0 = sampler(-1)
-    state = init_fn(loss_fn, x0_stacked, comm0)
+    Equivalent to building an :class:`~repro.core.experiment.Experiment`;
+    defaults to the legacy per-round host loop (``driver="loop"``) for exact
+    backward compatibility — pass ``driver="scan"`` for the chunked on-device
+    driver."""
+    bound = get_algorithm(algo).bind(loss_fn, cfg, mixing)
+    _, comm0 = sampler(-1)
+    state = bound.init(loss_fn, x0_stacked, comm0)
 
     hist = History()
     hist.byte_model = make_byte_model(
         mixing,
         x0_stacked,
         cfg.n_agents,
-        mixes_per_round=MIXES_PER_ROUND.get(algo, 1),
+        mixes_per_round=bound.comm.mixes_per_round,
+        server_payloads=bound.comm.server_payloads,
     )
     t0 = time.perf_counter()
-    for k in range(rounds):
-        local_batches, comm_batch = sampler(k)
-        is_global = bool(schedule(k))
-        fn = global_fn if is_global else gossip_fn
-        state, metrics = fn(state, local_batches, comm_batch)
-        hist.loss.append(float(metrics.loss))
-        hist.grad_sq_norm.append(float(metrics.grad_sq_norm))
-        hist.consensus_err.append(float(metrics.consensus_err))
-        hist.is_global.append(is_global)
-        hist.accountant.record(is_global, hist.byte_model.round_bytes(is_global))
-        if eval_fn is not None and (k % eval_every == 0 or k == rounds - 1):
-            x_bar = jax.tree.map(lambda v: jnp.mean(v, axis=0), state.x)
-            hist.eval_metrics.append(dict(eval_fn(x_bar), round=k))
-        if stop_when is not None and stop_when(hist):
-            break
+    if driver == "scan":
+        state = drive_scan(
+            bound, state, sampler, rounds, hist,
+            eval_fn=eval_fn, eval_every=eval_every, stop_when=stop_when,
+            block_size=block_size,
+        )
+    else:
+        state = drive_loop(
+            bound, state, sampler, rounds, hist,
+            eval_fn=eval_fn, eval_every=eval_every, stop_when=stop_when, jit=jit,
+        )
     hist.wall_time_s = time.perf_counter() - t0
-    hist.final_state = state  # type: ignore[attr-defined]
+    hist.final_state = state
     return hist

@@ -107,3 +107,26 @@ class RoundSampler:
         local = (xb[: self.t_o], yb[: self.t_o])
         comm = (xb[-1], yb[-1])
         return local, comm
+
+    def sample_block(self, start: int, stop: int):
+        """Batches for rounds ``[start, stop)`` with a leading round axis, in
+        one numpy gather + one device put (the scan driver's fast path).
+
+        Consumes the RNG stream in exactly the per-round order, so a block
+        draw and ``stop - start`` sequential ``__call__``s see identical
+        batches."""
+        n = stop - start
+        a, m = self.data.n_agents, self.data.samples_per_agent
+        idx = self._rng.integers(0, m, size=(n, self.t_o + 1, a, self.b))
+        xb = np.take_along_axis(
+            self.data.x_train[None, None],
+            idx.reshape(
+                n, self.t_o + 1, a, self.b, *([1] * (self.data.x_train.ndim - 2))
+            ),
+            axis=3,
+        )
+        yb = np.take_along_axis(self.data.y_train[None, None], idx, axis=3)
+        xb, yb = jnp.asarray(xb), jnp.asarray(yb)
+        local = (xb[:, : self.t_o], yb[:, : self.t_o])
+        comm = (xb[:, -1], yb[:, -1])
+        return local, comm

@@ -24,9 +24,11 @@ import numpy as np
 
 from repro.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
 from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.core.algorithms import get_algorithm, registered_algorithms
+from repro.core.driver import make_block_fn, predraw_schedule, sample_block
 from repro.core.mixing import dense_mixing
-from repro.core.pisco import PiscoConfig, init_state, make_round_fn, replicate_params
-from repro.core.schedule import CommAccountant, make_schedule
+from repro.core.pisco import PiscoConfig, replicate_params
+from repro.core.schedule import CommAccountant
 from repro.core.topology import make_topology
 from repro.data.synthetic import synthetic_lm_tokens
 from repro.models import get_bundle
@@ -102,6 +104,11 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--topology", default="ring")
+    ap.add_argument("--algo", default="pisco", choices=list(registered_algorithms()))
+    ap.add_argument("--driver", default="scan", choices=["scan", "loop"],
+                    help="scan: chunked on-device lax.scan; loop: legacy host loop")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="rounds per scan block (scan driver)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -131,29 +138,63 @@ def main(argv=None) -> int:
             start_round, tree = restore_checkpoint(latest)
             print(f"restored {latest} at round {start_round}")
 
-    gossip_fn = jax.jit(make_round_fn(bundle.loss, pcfg, mixing, global_round=False))
-    global_fn = jax.jit(make_round_fn(bundle.loss, pcfg, mixing, global_round=True))
-    schedule = make_schedule(args.p, args.seed)
+    bound = get_algorithm(args.algo).bind(bundle.loss, pcfg, mixing)
     acct = CommAccountant()
 
     local0, comm0 = sampler(-1)
-    state = init_state(bundle.loss, x0, comm0)
+    state = bound.init(bundle.loss, x0, comm0)
     t0 = time.perf_counter()
-    for k in range(start_round, args.rounds):
-        local, comm = sampler(k)
-        is_global = schedule(k)
-        acct.record(is_global)
-        fn = global_fn if is_global else gossip_fn
-        state, metrics = fn(state, local, comm)
-        if k % args.log_every == 0 or k == args.rounds - 1:
-            print(
-                f"round {k:4d} [{'J' if is_global else 'W'}] "
-                f"loss={float(metrics.loss):.4f} "
-                f"|grad|^2={float(metrics.grad_sq_norm):.3e} "
-                f"consensus={float(metrics.consensus_err):.3e}"
+    if args.driver == "loop":
+        gossip_fn = jax.jit(bound.gossip_round)
+        global_fn = (
+            jax.jit(bound.global_round)
+            if bound.global_round is not bound.gossip_round else gossip_fn
+        )
+        for k in range(start_round, args.rounds):
+            local, comm = sampler(k)
+            is_global = bool(bound.schedule(k))
+            acct.record(is_global)
+            fn = global_fn if is_global else gossip_fn
+            state, metrics = fn(state, local, comm)
+            if k % args.log_every == 0 or k == args.rounds - 1:
+                print(
+                    f"round {k:4d} [{'J' if is_global else 'W'}] "
+                    f"loss={float(metrics.loss):.4f} "
+                    f"|grad|^2={float(metrics.grad_sq_norm):.3e} "
+                    f"consensus={float(metrics.consensus_err):.3e}"
+                )
+            if args.ckpt_dir and args.ckpt_every and (k + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, k + 1, state)
+    else:
+        # Scan driver: pre-draw the Bernoulli(p) flags for each block on the
+        # host, run the block on-device, sync only at log/checkpoint cuts.
+        block_fn = make_block_fn(bound)
+        k = start_round
+        while k < args.rounds:
+            stop = min(k + args.block_size, args.rounds)
+            nxt_log = k if k % args.log_every == 0 else (
+                (k // args.log_every + 1) * args.log_every
             )
-        if args.ckpt_dir and args.ckpt_every and (k + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, k + 1, state)
+            if nxt_log < args.rounds:
+                stop = min(stop, nxt_log + 1)
+            if args.ckpt_dir and args.ckpt_every:
+                stop = min(stop, (k // args.ckpt_every + 1) * args.ckpt_every)
+            flags = predraw_schedule(bound.schedule, k, stop)
+            local, comm = sample_block(sampler, k, stop)
+            state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
+            for f in flags:
+                acct.record(bool(f))
+            k_end = stop - 1
+            if k_end % args.log_every == 0 or k_end == args.rounds - 1:
+                print(
+                    f"round {k_end:4d} [{'J' if flags[-1] else 'W'}] "
+                    f"loss={float(metrics.loss[-1]):.4f} "
+                    f"|grad|^2={float(metrics.grad_sq_norm[-1]):.3e} "
+                    f"consensus={float(metrics.consensus_err[-1]):.3e}"
+                )
+            if args.ckpt_dir and args.ckpt_every and stop % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, stop, state)
+            k = stop
     dt = time.perf_counter() - t0
     print(
         f"done: {args.rounds} rounds in {dt:.1f}s "

@@ -1,0 +1,322 @@
+"""Algorithm registry, ExperimentSpec API, and scan/loop driver parity."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_logreg_problem
+from repro.core import (
+    Experiment,
+    ExperimentSpec,
+    PiscoConfig,
+    dense_mixing,
+    get_algorithm,
+    make_topology,
+    register_algorithm,
+    registered_algorithms,
+    replicate_params,
+    run_training,
+    unregister_algorithm,
+)
+from repro.core.schedule import PeriodicSchedule
+from repro.data import FederatedDataset, RoundSampler
+
+
+def _problem(n=6, t_o=2):
+    loss_fn, full_grad_sq, sampler_factory, d = make_logreg_problem(n_agents=n)
+    mixing = dense_mixing(make_topology("ring", n))
+    x0 = replicate_params({"w": jnp.zeros(d)}, n)
+    return loss_fn, full_grad_sq, sampler_factory, d, mixing, x0
+
+
+# ---------------------------------------------------------------------------
+# Parity: the scan driver reproduces the legacy Python-loop History
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", registered_algorithms())
+def test_scan_driver_matches_legacy_loop(algo):
+    n, rounds = 6, 13
+    loss_fn, full_grad_sq, sampler_factory, d, mixing, x0 = _problem(n)
+    cfg = PiscoConfig(n_agents=n, t_o=2, eta_l=0.15, eta_c=1.0, p=0.3, seed=0)
+    eval_fn = lambda xb: {"grad_sq": full_grad_sq(xb)}
+
+    def run(driver):
+        return run_training(
+            algo, loss_fn, x0, cfg, mixing, sampler_factory(cfg.t_o),
+            rounds=rounds, eval_fn=eval_fn, eval_every=5,
+            driver=driver, block_size=4,
+        )
+
+    h_loop, h_scan = run("loop"), run("scan")
+    assert h_loop.is_global == h_scan.is_global
+    np.testing.assert_allclose(h_loop.loss, h_scan.loss, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        h_loop.grad_sq_norm, h_scan.grad_sq_norm, rtol=1e-5, atol=1e-7
+    )
+    np.testing.assert_allclose(
+        h_loop.consensus_err, h_scan.consensus_err, rtol=1e-5, atol=1e-7
+    )
+    assert [m["round"] for m in h_loop.eval_metrics] == [
+        m["round"] for m in h_scan.eval_metrics
+    ]
+    for ml, ms in zip(h_loop.eval_metrics, h_scan.eval_metrics):
+        np.testing.assert_allclose(
+            ml["grad_sq"], ms["grad_sq"], rtol=1e-5, atol=1e-7
+        )
+    for field in (
+        "agent_to_agent", "agent_to_server",
+        "agent_to_agent_bytes", "agent_to_server_bytes",
+    ):
+        assert getattr(h_loop.accountant, field) == getattr(
+            h_scan.accountant, field
+        ), field
+    assert h_loop.final_state is not None and h_scan.final_state is not None
+    np.testing.assert_allclose(
+        np.asarray(h_loop.final_state.x["w"]),
+        np.asarray(h_scan.final_state.x["w"]),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_scan_driver_parity_with_compression():
+    n, rounds = 6, 10
+    loss_fn, _, sampler_factory, d, _, x0 = _problem(n)
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=n, t_o=2, eta_l=0.15, p=0.2, seed=0,
+        compression="q8", rounds=rounds, eval_every=4, block_size=4,
+    )
+    hists = {}
+    for driver in ("loop", "scan"):
+        exp = Experiment(
+            spec.replace(driver=driver),
+            loss_fn=loss_fn,
+            x0=x0,
+            sampler_factory=lambda s: sampler_factory(s.config.t_o),
+        )
+        hists[driver] = exp.run()
+    np.testing.assert_allclose(
+        hists["loop"].loss, hists["scan"].loss, rtol=1e-5, atol=1e-6
+    )
+    assert (
+        hists["loop"].accountant.agent_to_agent_bytes
+        == hists["scan"].accountant.agent_to_agent_bytes
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry: a third-party algorithm plugs in without touching trainer code
+# ---------------------------------------------------------------------------
+
+
+def test_third_party_algorithm_registers_and_runs():
+    from repro.core.baselines import SGDState, make_stacked_value_and_grad
+
+    name = "toy_signsgd"
+
+    @register_algorithm(
+        name, mixes_per_round=1, uses_local_updates=False,
+        description="toy: gossip sign-SGD",
+    )
+    def _build(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+        del spec, eta_g
+        eta = cfg.eta_l if eta is None else eta
+        stacked_vg = make_stacked_value_and_grad(loss_fn)
+
+        def make(mix):
+            def round_fn(state, local_batches, comm_batch):
+                from repro.core.pisco import RoundMetrics
+
+                loss, g = stacked_vg(state.x, comm_batch)
+                x = jax.tree.map(
+                    lambda xi, gi: xi - eta * jnp.sign(gi), state.x, g
+                )
+                x = mix(x)
+                z = jnp.zeros(())
+                return SGDState(x=x, step=state.step + 1), RoundMetrics(
+                    jnp.mean(loss), z, z
+                )
+
+            return round_fn
+
+        def init(loss_fn, x0, batch0):
+            del loss_fn, batch0
+            return SGDState(x=x0, step=jnp.zeros((), jnp.int32))
+
+        return init, make(mixing.gossip), make(mixing.global_avg)
+
+    try:
+        assert name in registered_algorithms()
+        n = 4
+        loss_fn, _, sampler_factory, d, _, _ = _problem(n)
+        spec = ExperimentSpec.create(
+            algo=name, n_agents=n, t_o=1, eta_l=0.05, p=0.5, seed=1,
+            rounds=8, eval_every=4, driver="scan", block_size=3,
+        )
+        hist = Experiment(
+            spec,
+            loss_fn=loss_fn,
+            params0={"w": jnp.zeros(d)},
+            sampler_factory=lambda s: sampler_factory(s.config.t_o),
+        ).run()
+        assert len(hist.loss) == 8
+        assert np.isfinite(hist.loss).all()
+        assert hist.accountant.total == 8
+        # the registry priced the byte model from the entry's CommProfile
+        assert hist.accountant.total_bytes > 0
+    finally:
+        unregister_algorithm(name)
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        get_algorithm(name)
+
+
+def test_registry_covers_the_papers_seven():
+    assert set(registered_algorithms()) >= {
+        "pisco", "dsgd", "dsgt", "gossip_pga", "periodical_gt", "fedavg",
+        "scaffold",
+    }
+    assert get_algorithm("pisco").comm.mixes_per_round == 2
+    assert get_algorithm("scaffold").comm.server_payloads == 2
+    assert get_algorithm("dsgd").comm.mixes_per_round == 1
+    with pytest.raises(ValueError, match="already registered"):
+        register_algorithm("pisco")(lambda *a, **k: None)
+
+
+def test_registry_comm_profiles_agree_with_baseline_specs():
+    from repro.core.baselines import BASELINES
+
+    for name, spec in BASELINES.items():
+        comm = get_algorithm(name).comm
+        assert comm.server_based == spec.server_based, name
+        assert comm.uses_local_updates == spec.uses_local_updates, name
+
+
+def test_gossip_pga_avg_period_is_registry_data():
+    """p > 0 derives the period as round(1/p); p == 0 falls back to the
+    entry's explicit avg_period field (documented default 10)."""
+    algo = get_algorithm("gossip_pga")
+    assert algo.avg_period == 10
+    cfg0 = PiscoConfig(n_agents=4, t_o=1, p=0.0)
+    sched = algo.make_default_schedule(cfg0)
+    assert isinstance(sched, PeriodicSchedule) and sched.period == 10
+    cfg = PiscoConfig(n_agents=4, t_o=1, p=0.25)
+    assert algo.make_default_schedule(cfg).period == 4
+    # the field is overridable without touching any trainer code
+    custom = dataclasses.replace(algo, avg_period=3)
+    assert custom.make_default_schedule(cfg0).period == 3
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec / Experiment / History
+# ---------------------------------------------------------------------------
+
+
+def test_experiment_spec_round_trips_dict_and_json():
+    spec = ExperimentSpec.create(
+        algo="dsgt", n_agents=8, t_o=3, eta_l=0.2, p=0.15, seed=7,
+        topology="er", topology_kwargs={"p_edge": 0.5, "seed": 3},
+        compression="q4", rounds=40, eval_every=5, driver="scan",
+        block_size=8,
+    )
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    # json payload is plain data
+    payload = json.loads(spec.to_json())
+    assert payload["config"]["p"] == 0.15
+    assert payload["topology_kwargs"] == {"p_edge": 0.5, "seed": 3}
+
+
+def test_experiment_spec_replace_routes_config_fields():
+    spec = ExperimentSpec.create(algo="pisco", n_agents=4, p=0.1)
+    assert spec.replace(p=0.9).config.p == 0.9
+    assert spec.replace(rounds=7).rounds == 7
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        ExperimentSpec.create(algo="nope", n_agents=4)
+
+
+def test_experiment_sweep_seeds_matches_individual_runs():
+    """The vmapped multi-seed sweep reproduces per-seed sequential runs."""
+    n, rounds = 4, 6
+    loss_fn, _, sampler_factory, d, _, _ = _problem(n)
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=n, t_o=1, eta_l=0.1, p=0.5, seed=0,
+        rounds=rounds, eval_every=3, driver="scan", block_size=3,
+    )
+    factory = lambda s: sampler_factory(s.config.t_o, seed=s.config.seed)
+    exp = Experiment(
+        spec, loss_fn=loss_fn, params0={"w": jnp.zeros(d)},
+        sampler_factory=factory,
+    )
+    seeds = [0, 1]
+    swept = exp.sweep(seeds=seeds)
+    for seed, hist in zip(seeds, swept):
+        # a sequential run whose *data* seed matches, sharing the spec's
+        # schedule seed (the sweep advances all seeds through one realized
+        # schedule)
+        solo = Experiment(
+            spec.replace(seed=seed), loss_fn=loss_fn,
+            params0={"w": jnp.zeros(d)}, sampler_factory=factory,
+        ).run()
+        # schedules may differ (solo draws from its own seed) — so compare
+        # only when the realized schedules agree
+        if solo.is_global == hist.is_global:
+            np.testing.assert_allclose(
+                solo.loss, hist.loss, rtol=1e-5, atol=1e-6
+            )
+        assert len(hist.loss) == rounds
+        assert np.isfinite(hist.loss).all()
+        assert hist.final_state is not None
+
+
+def test_experiment_sweep_grid():
+    n = 4
+    loss_fn, _, sampler_factory, d, _, _ = _problem(n)
+    spec = ExperimentSpec.create(
+        algo="dsgd", n_agents=n, t_o=1, eta_l=0.1, p=0.0, seed=0,
+        rounds=5, driver="scan", block_size=5,
+    )
+    exp = Experiment(
+        spec, loss_fn=loss_fn, params0={"w": jnp.zeros(d)},
+        sampler_factory=lambda s: sampler_factory(s.config.t_o),
+    )
+    out = exp.sweep(grid={"p": [0.0, 1.0]})
+    assert [s.config.p for s, _ in out] == [0.0, 1.0]
+    # dsgd keeps its never-schedule regardless of p; fedavg-style always
+    # schedules come from the registry entry, not the grid
+    for _, hist in out:
+        assert len(hist.loss) == 5
+
+
+def test_history_to_dict_is_json_serializable():
+    n = 4
+    loss_fn, full_grad_sq, sampler_factory, d, mixing, x0 = _problem(n)
+    cfg = PiscoConfig(n_agents=n, t_o=1, eta_l=0.1, p=0.5, seed=0)
+    hist = run_training(
+        "pisco", loss_fn, x0, cfg, mixing, sampler_factory(1), rounds=4,
+        eval_fn=lambda xb: {"grad_sq": full_grad_sq(xb)}, eval_every=2,
+    )
+    d1 = hist.to_dict()
+    s = json.dumps(d1)  # must not raise
+    d2 = json.loads(s)
+    assert d2["loss"] == d1["loss"]
+    assert all(isinstance(m["round"], int) for m in d2["eval_metrics"])
+    assert "final_state" not in d1  # device data stays out of JSON
+    assert hist.final_state is not None  # but is a first-class field
+    assert d2["accountant"]["agent_to_agent"] == hist.accountant.agent_to_agent
+    assert d2["byte_model"]["server_round_bytes"] > 0
+
+
+def test_round_sampler_block_matches_sequential():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(40, 3)); y = np.sign(rng.normal(size=40))
+    data = FederatedDataset.from_arrays(x, y, 4, heterogeneous=True)
+    s1 = RoundSampler(data, batch_size=2, t_o=2, seed=5)
+    s2 = RoundSampler(data, batch_size=2, t_o=2, seed=5)
+    seq = [s1(k) for k in range(6)]
+    blk_local, blk_comm = s2.sample_block(0, 6)
+    for k in range(6):
+        np.testing.assert_array_equal(np.asarray(seq[k][0][0]), np.asarray(blk_local[0][k]))
+        np.testing.assert_array_equal(np.asarray(seq[k][1][1]), np.asarray(blk_comm[1][k]))

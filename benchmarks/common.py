@@ -10,14 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    Experiment,
-    ExperimentSpec,
-    compress_mixing,
-    dense_mixing,
-    make_compressor,
-    make_topology,
-)
+from repro.core import Experiment, ExperimentSpec, make_topology
 from repro.data import FederatedDataset, RoundSampler
 from repro.models import simple as S
 
@@ -80,6 +73,8 @@ def run_pisco_variant(
     compression: Optional[str] = None,
     error_feedback: bool = True,
     driver: str = "scan",
+    network: Optional[str] = None,
+    participation: float = 1.0,
 ):
     spec = ExperimentSpec.create(
         algo=algo,
@@ -91,6 +86,8 @@ def run_pisco_variant(
         seed=seed,
         topology=topology_name,
         topology_kwargs=topo_kwargs or {},
+        network=network,
+        participation=participation,
         compression=compression,
         error_feedback=error_feedback,
         rounds=rounds,
@@ -99,12 +96,7 @@ def run_pisco_variant(
     )
     # build the topology once: the returned topo is the one trained on
     topo = make_topology(topology_name, data.n_agents, **(topo_kwargs or {}))
-    mixing = dense_mixing(topo)
-    if compression is not None:
-        mixing = compress_mixing(
-            mixing, make_compressor(compression),
-            error_feedback=error_feedback, seed=seed,
-        )
+    mixing = spec.make_mixing()
     b = min(batch, data.samples_per_agent)
     exp = Experiment(
         spec,

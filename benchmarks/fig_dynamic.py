@@ -1,0 +1,124 @@
+"""Dynamic-network scenario sweep: link failures × participation × topology.
+
+The paper's experiments freeze the gossip graph; the realistic regime
+(Rodio et al.; FedDec) samples links and clients every round.  This sweep
+runs PISCO over the dynamic :class:`~repro.core.topology.TopologyProcess`
+stack — i.i.d. Bernoulli link failures at several failure probabilities,
+partial m-of-n server participation — on multiple base topologies, and reads
+out *realized* communication (the accountant prices the edges and
+participants that actually fired, not the static round constants).
+
+Emits both ``BENCH_dynamic.json`` and a flat ``fig_dynamic.csv`` under
+``artifacts/bench/``.
+
+    PYTHONPATH=src python -m benchmarks.fig_dynamic [--quick]
+"""
+from __future__ import annotations
+
+import csv
+import os
+
+import numpy as np
+
+from benchmarks.common import ARTIFACTS, make_logreg_workload, run_pisco_variant, save_result
+
+FAILURE_GRID = [0.0, 0.3, 0.6]
+PARTICIPATION_GRID = [1.0, 0.5]
+TOPOLOGIES = ["ring", "full"]
+
+CSV_FIELDS = (
+    "topology", "failure_prob", "participation", "rounds_to_target",
+    "bytes_to_target", "gossip_bytes", "server_bytes", "total_bytes",
+    "final_grad_sq",
+)
+
+
+def _cell_readout(hist, grad_target: float) -> dict:
+    """Rounds + realized bytes when the running-mean grad norm first crosses
+    the target (None when never reached), plus realized totals."""
+    acct = hist.accountant
+    cum_bytes = np.cumsum(acct.per_round_bytes)
+    r = hist.rounds_to_threshold("grad_sq", grad_target, mode="running_le")
+    return {
+        "rounds_to_target": None if r is None else r + 1,
+        "bytes_to_target": None if r is None else int(cum_bytes[r]),
+        "gossip_bytes": int(acct.agent_to_agent_bytes),
+        "server_bytes": int(acct.agent_to_server_bytes),
+        "total_bytes": int(acct.total_bytes),
+        "final_grad_sq": float(hist.grad_sq_norm[-1]),
+    }
+
+
+def run(quick: bool = False, seed: int = 0) -> dict:
+    rounds = 150 if quick else 600
+    failures = [0.0, 0.4] if quick else FAILURE_GRID
+    parts = PARTICIPATION_GRID
+    topologies = ["ring"] if quick else TOPOLOGIES
+    grad_target = 0.002
+
+    data, loss_fn, eval_fn, params0 = make_logreg_workload(quick=quick, seed=seed)
+    results = {}
+    rows = []
+    for topo in topologies:
+        for q in failures:
+            for frac in parts:
+                hist, _ = run_pisco_variant(
+                    data=data, loss_fn=loss_fn, eval_fn=eval_fn,
+                    params0=params0, topology_name=topo,
+                    p=0.1, t_o=1, eta_l=0.5, rounds=rounds, seed=seed,
+                    network=f"bernoulli:{q}" if q > 0 else "static",
+                    participation=frac,
+                )
+                cell = _cell_readout(hist, grad_target)
+                key = f"topo={topo},q={q:.2f},part={frac:.2f}"
+                results[key] = cell
+                rows.append(
+                    dict(topology=topo, failure_prob=q, participation=frac, **cell)
+                )
+    payload = {"bench": "fig_dynamic", "quick": quick, "results": results}
+    save_result("BENCH_dynamic", payload)
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    csv_path = os.path.join(ARTIFACTS, "fig_dynamic.csv")
+    with open(csv_path, "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=CSV_FIELDS)
+        writer.writeheader()
+        writer.writerows(rows)
+    payload["csv"] = csv_path
+    return payload
+
+
+def participation_byte_savings(results: dict):
+    """Server-byte savings of half participation vs full, same topology and
+    failure prob (the honest realized-edge readout).  None if incomparable."""
+    savings = []
+    for key, cell in results.items():
+        if ",part=0.50" not in key or not cell:
+            continue
+        base = results.get(key.replace(",part=0.50", ",part=1.00"))
+        if base and base["server_bytes"] and cell["server_bytes"]:
+            savings.append(base["server_bytes"] / cell["server_bytes"])
+    return max(savings) if savings else None
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    payload = run(quick=args.quick)
+    print(f"{'scenario':>32} | {'rounds':>7} {'MB@target':>10} {'final |g|^2':>12}")
+    for key, cell in payload["results"].items():
+        rt = cell["rounds_to_target"]
+        bt = cell["bytes_to_target"]
+        print(
+            f"{key:>32} | "
+            f"{rt if rt is not None else '---':>7} "
+            f"{bt / 1e6 if bt is not None else float('nan'):10.3f} "
+            f"{cell['final_grad_sq']:12.3e}"
+        )
+    print(f"csv: {payload['csv']}")
+
+
+if __name__ == "__main__":
+    main()

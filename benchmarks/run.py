@@ -20,7 +20,7 @@ def _row(name: str, seconds: float, derived: str) -> None:
 # are opt-in (not part of the default sweep).
 KNOWN = (
     "fig4", "fig5", "fig6", "fig7", "table2", "roofline", "compression",
-    "ablation", "driver",
+    "dynamic", "ablation", "driver",
 )
 
 
@@ -116,6 +116,18 @@ def main() -> None:
             f"gossip_byte_savings_vs_fp32={saving:.1f}x" if saving else "n/a"
         )
         _row("fig_compression", time.perf_counter() - t0, derived)
+
+    if only is None or "dynamic" in only:
+        from benchmarks import fig_dynamic
+
+        t0 = time.perf_counter()
+        payload = fig_dynamic.run(quick=quick)
+        saving = fig_dynamic.participation_byte_savings(payload["results"])
+        _row(
+            "fig_dynamic",
+            time.perf_counter() - t0,
+            f"server_byte_savings_half_part={saving:.2f}x" if saving else "n/a",
+        )
 
     if only is None or "table2" in only:
         from benchmarks import table2_complexity

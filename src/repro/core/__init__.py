@@ -13,7 +13,15 @@ from repro.core.pisco import (
 )
 from repro.core.topology import (
     Topology,
+    TopologyProcess,
+    StaticProcess,
+    LinkFailureProcess,
+    RandomMatchingProcess,
+    RoundRobinProcess,
+    ParticipationProcess,
     make_topology,
+    make_topology_process,
+    parse_process_spec,
     mixing_rate,
     expected_mixing_rate,
     is_doubly_stochastic,
@@ -22,7 +30,10 @@ from repro.core.topology import (
 )
 from repro.core.mixing import (
     MixingOps,
+    NetworkContext,
     dense_mixing,
+    dynamic_dense_mixing,
+    make_network_mixing,
     identity_mixing,
     collective_global_mixing,
     collective_shift_mixing,
@@ -57,20 +68,29 @@ from repro.core.algorithms import (
     registered_algorithms,
     unregister_algorithm,
 )
-from repro.core.driver import drive_loop, drive_scan, make_block_fn
+from repro.core.driver import (
+    drive_loop,
+    drive_scan,
+    dynamic_round_fns,
+    make_block_fn,
+)
 from repro.core.experiment import Experiment, ExperimentSpec, run_experiment
 
 __all__ = [
     "Algorithm", "BoundAlgorithm", "CommProfile", "get_algorithm",
     "register_algorithm", "registered_algorithms", "unregister_algorithm",
-    "drive_loop", "drive_scan", "make_block_fn",
+    "drive_loop", "drive_scan", "dynamic_round_fns", "make_block_fn",
     "Experiment", "ExperimentSpec", "run_experiment",
     "PiscoConfig", "PiscoState", "RoundMetrics", "init_state",
     "init_compression_state", "make_round_fn",
     "make_stacked_value_and_grad", "replicate_params", "decentralized_config",
-    "federated_config", "Topology", "make_topology", "mixing_rate",
-    "expected_mixing_rate", "is_doubly_stochastic", "is_connected",
-    "global_matrix", "MixingOps", "dense_mixing", "identity_mixing",
+    "federated_config", "Topology", "TopologyProcess", "StaticProcess",
+    "LinkFailureProcess", "RandomMatchingProcess", "RoundRobinProcess",
+    "ParticipationProcess", "make_topology", "make_topology_process",
+    "parse_process_spec", "mixing_rate", "expected_mixing_rate",
+    "is_doubly_stochastic", "is_connected", "global_matrix", "MixingOps",
+    "NetworkContext", "dense_mixing", "dynamic_dense_mixing",
+    "make_network_mixing", "identity_mixing",
     "collective_global_mixing", "collective_shift_mixing",
     "collective_dense_mixing", "hierarchical_mixing", "BernoulliSchedule",
     "PeriodicSchedule", "CommAccountant", "RoundByteModel", "make_schedule",

@@ -87,6 +87,11 @@ class BoundAlgorithm:
     global_round: Callable
     schedule: Callable[[int], bool]
     comm: CommProfile
+    # NetworkContext when the mixing is dynamic (time-varying topology and/or
+    # partial participation): the drivers pre-draw per-round matrices through
+    # it and thread them into the round functions.  None => static network,
+    # the exact pre-dynamic code path.
+    network: Optional[Any] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +153,7 @@ class Algorithm:
             schedule=schedule if schedule is not None else
             self.make_default_schedule(cfg),
             comm=self.comm,
+            network=getattr(mixing, "network", None),
         )
 
 

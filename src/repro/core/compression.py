@@ -373,4 +373,6 @@ def make_byte_model(
         server_round_bytes=server_payloads * 2 * n_agents * server_msg,
         gossip_message_bytes=gossip_msg,
         server_message_bytes=server_msg,
+        mixes_per_round=mixes_per_round,
+        server_payloads=server_payloads,
     )

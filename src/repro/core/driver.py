@@ -93,8 +93,11 @@ def block_bounds(
 
 
 def make_block_fn(bound: BoundAlgorithm, *, jit: bool = True) -> Callable:
-    """One jitted ``(state, flags, local, comm) -> (state, stacked_metrics)``
-    scanning a block of rounds on-device.
+    """One jitted block function scanning a block of rounds on-device:
+    ``(state, flags, local, comm)`` for a static network, or
+    ``(state, flags, w_gossip, w_server, local, comm)`` when ``bound.network``
+    is set — the per-round mixing matrices ride the scan exactly like the
+    pre-drawn Bernoulli(p) flags.
 
     ``flags`` is the pre-drawn bool vector (block,), ``local``/``comm`` carry
     the block's batches with a leading round axis.  When the algorithm uses a
@@ -102,17 +105,60 @@ def make_block_fn(bound: BoundAlgorithm, *, jit: bool = True) -> Callable:
     is elided."""
     gossip, glob = bound.gossip_round, bound.global_round
     same = glob is gossip
+    net = bound.network
 
-    def body(state, per_round):
-        flag, local, comm = per_round
-        if same:
-            return gossip(state, local, comm)
-        return jax.lax.cond(flag, glob, gossip, state, local, comm)
+    if net is None:
+        def body(state, per_round):
+            flag, local, comm = per_round
+            if same:
+                return gossip(state, local, comm)
+            return jax.lax.cond(flag, glob, gossip, state, local, comm)
 
-    def block_fn(state, flags, local, comm):
-        return jax.lax.scan(body, state, (flags, local, comm))
+        def block_fn(state, flags, local, comm):
+            return jax.lax.scan(body, state, (flags, local, comm))
+    else:
+        def body(state, per_round):
+            flag, w_gossip, w_server, local, comm = per_round
+            # Stage this round's matrices; the mixing closures inside the
+            # round functions read them as live scan-operand tracers.
+            net.slot.set(w_gossip, w_server)
+            if same:
+                return gossip(state, local, comm)
+            return jax.lax.cond(flag, glob, gossip, state, local, comm)
+
+        def block_fn(state, flags, w_gossip, w_server, local, comm):
+            return jax.lax.scan(
+                body, state, (flags, w_gossip, w_server, local, comm)
+            )
 
     return jax.jit(block_fn) if jit else block_fn
+
+
+def dynamic_round_fns(
+    bound: BoundAlgorithm, *, jit: bool = True
+) -> Tuple[Callable, Callable]:
+    """Per-round ``(gossip_fn, global_fn)`` for a dynamic network, each with
+    signature ``(state, local, comm, w_gossip, w_server)``: the matrices are
+    explicit jit arguments (fresh per round, one trace), staged into the
+    network slot before the wrapped round function is traced."""
+    net = bound.network
+    assert net is not None, "dynamic_round_fns requires bound.network"
+    gossip, glob = bound.gossip_round, bound.global_round
+    same = glob is gossip
+
+    def wrap(fn):
+        def fn_w(state, local, comm, w_gossip, w_server):
+            net.slot.set(w_gossip, w_server)
+            return fn(state, local, comm)
+
+        return fn_w
+
+    gossip_w = wrap(gossip)
+    global_w = gossip_w if same else wrap(glob)
+    if jit:
+        gossip_w = jax.jit(gossip_w)
+        global_w = gossip_w if same else jax.jit(global_w)
+    return gossip_w, global_w
 
 
 def _eval_at_xbar(eval_fn: EvalFn, state, k: int) -> Dict[str, float]:
@@ -120,11 +166,22 @@ def _eval_at_xbar(eval_fn: EvalFn, state, k: int) -> Dict[str, float]:
     return dict(eval_fn(x_bar), round=k)
 
 
-def _record_flags(hist, flags: np.ndarray) -> None:
-    for f in flags:
+def record_flags(hist, flags: np.ndarray, realized=None) -> None:
+    """Record schedule flags + per-round bytes.  ``realized`` is an optional
+    ``(messages, participants)`` pair of per-round arrays for dynamic
+    networks — bytes are then priced per realized edge/participant instead of
+    the static round constants."""
+    for i, f in enumerate(flags):
         f = bool(f)
         hist.is_global.append(f)
-        hist.accountant.record(f, hist.byte_model.round_bytes(f))
+        if realized is None:
+            nbytes = hist.byte_model.round_bytes(f)
+        else:
+            messages, participants = realized
+            nbytes = hist.byte_model.realized_round_bytes(
+                f, int(messages[i]), int(participants[i])
+            )
+        hist.accountant.record(f, nbytes)
 
 
 def drive_scan(
@@ -151,10 +208,20 @@ def drive_scan(
         eval_every=eval_every if eval_fn is not None else 0,
         block_size=block_size,
     )
+    net = bound.network
     for start, stop in cuts:
         flags = predraw_schedule(bound.schedule, start, stop)
         local, comm = sample_block(sampler, start, stop)
-        state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
+        if net is None:
+            realized = None
+            state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
+        else:
+            w_gossip, w_server, messages, participants = net.draw_block(start, stop)
+            realized = (messages, participants)
+            state, metrics = block_fn(
+                state, jnp.asarray(flags), jnp.asarray(w_gossip),
+                jnp.asarray(w_server), local, comm,
+            )
         # one device->host sync for the whole block
         hist.loss.extend(np.asarray(metrics.loss, dtype=np.float64).tolist())
         hist.grad_sq_norm.extend(
@@ -163,7 +230,7 @@ def drive_scan(
         hist.consensus_err.extend(
             np.asarray(metrics.consensus_err, dtype=np.float64).tolist()
         )
-        _record_flags(hist, flags)
+        record_flags(hist, flags, realized)
         k_end = stop - 1
         if eval_fn is not None and (k_end % eval_every == 0 or k_end == rounds - 1):
             hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k_end))
@@ -186,9 +253,14 @@ def drive_loop(
     round_fns: Optional[Tuple[Callable, Callable]] = None,
 ):
     """The legacy per-round host loop (reference semantics).  ``round_fns``
-    supplies prejitted ``(gossip_fn, global_fn)`` to reuse across drives."""
+    supplies prejitted ``(gossip_fn, global_fn)`` to reuse across drives —
+    when ``bound.network`` is set they must be the matrix-threaded form from
+    :func:`dynamic_round_fns`."""
+    net = bound.network
     if round_fns is not None:
         gossip_fn, global_fn = round_fns
+    elif net is not None:
+        gossip_fn, global_fn = dynamic_round_fns(bound, jit=jit)
     else:
         gossip_fn, global_fn = bound.gossip_round, bound.global_round
         if jit:
@@ -201,12 +273,23 @@ def drive_loop(
         local_batches, comm_batch = sampler(k)
         is_global = bool(bound.schedule(k))
         fn = global_fn if is_global else gossip_fn
-        state, metrics = fn(state, local_batches, comm_batch)
+        if net is None:
+            state, metrics = fn(state, local_batches, comm_batch)
+            nbytes = hist.byte_model.round_bytes(is_global)
+        else:
+            w_gossip, w_server, messages, participants = net.draw_round(k)
+            state, metrics = fn(
+                state, local_batches, comm_batch,
+                jnp.asarray(w_gossip), jnp.asarray(w_server),
+            )
+            nbytes = hist.byte_model.realized_round_bytes(
+                is_global, messages, participants
+            )
         hist.loss.append(float(metrics.loss))
         hist.grad_sq_norm.append(float(metrics.grad_sq_norm))
         hist.consensus_err.append(float(metrics.consensus_err))
         hist.is_global.append(is_global)
-        hist.accountant.record(is_global, hist.byte_model.round_bytes(is_global))
+        hist.accountant.record(is_global, nbytes)
         if eval_fn is not None and (k % eval_every == 0 or k == rounds - 1):
             hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k))
         if stop_when is not None and stop_when(hist):

@@ -2,8 +2,9 @@
 
 An :class:`ExperimentSpec` is a frozen, dict/JSON-round-trippable bundle of
 *what* to run — algorithm name (resolved through the registry), topology,
-compression, :class:`~repro.core.pisco.PiscoConfig`, round budget, eval
-policy, and which round driver executes it.  The *problem* (loss function,
+dynamic-network process (``network=``) and server-round participation
+fraction, compression, :class:`~repro.core.pisco.PiscoConfig`, round budget,
+eval policy, and which round driver executes it.  The *problem* (loss function,
 initial parameters, data sampler, eval function) stays runtime state on
 :class:`Experiment`, because closures and datasets don't belong in JSON.
 
@@ -39,6 +40,7 @@ from repro.core.compression import make_byte_model, make_compressor, compress_mi
 from repro.core.driver import (
     DEFAULT_BLOCK_SIZE,
     DRIVERS,
+    record_flags,
     block_bounds,
     drive_loop,
     drive_scan,
@@ -47,9 +49,9 @@ from repro.core.driver import (
     sample_block,
     stack_rounds,
 )
-from repro.core.mixing import MixingOps, dense_mixing
+from repro.core.mixing import MixingOps, make_network_mixing
 from repro.core.pisco import LossFn, PiscoConfig, replicate_params
-from repro.core.topology import make_topology
+from repro.core.topology import make_topology, parse_process_spec
 from repro.core.trainer import History
 
 PyTree = Any
@@ -67,6 +69,13 @@ class ExperimentSpec:
     config: PiscoConfig
     topology: str = "ring"
     topology_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    # Dynamic network: None => the frozen base matrix every round (legacy
+    # path, bit-identical to pre-dynamic runs); else a TopologyProcess spec —
+    # "static" | "bernoulli[:failure_prob]" | "matching" | "roundrobin[:n]".
+    network: Optional[str] = None
+    # Fraction of agents sampled into each server round (uniform m-of-n,
+    # doubly stochastic sampled-to-sampled averaging); 1.0 => everyone.
+    participation: float = 1.0
     compression: Optional[str] = None  # None | "q8" | "q4" | "top0.1" | ...
     error_feedback: bool = True
     rounds: int = 100
@@ -77,6 +86,12 @@ class ExperimentSpec:
     def __post_init__(self):
         if self.driver not in DRIVERS:
             raise ValueError(f"driver {self.driver!r} not in {DRIVERS}")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError(
+                f"participation must be in (0, 1], got {self.participation}"
+            )
+        if self.network is not None:
+            parse_process_spec(self.network)  # fail fast on bad specs
         # normalize mapping-typed topology kwargs into sorted item tuples so
         # specs stay hashable and JSON round-trips are canonical
         if isinstance(self.topology_kwargs, dict):
@@ -130,7 +145,9 @@ class ExperimentSpec:
         topo = make_topology(
             self.topology, self.config.n_agents, **dict(self.topology_kwargs)
         )
-        mixing = dense_mixing(topo)
+        mixing = make_network_mixing(
+            topo, self.network, self.participation, seed=self.config.seed
+        )
         if self.compression is not None:
             mixing = compress_mixing(
                 mixing,
@@ -298,6 +315,7 @@ class Experiment:
             eval_every=spec.eval_every if self.eval_fn is not None else 0,
             block_size=spec.block_size,
         )
+        net = bound.network
         for start, stop in cuts:
             flags = predraw_schedule(bound.schedule, start, stop)
             per_seed = [sample_block(s, start, stop) for s in samplers]
@@ -308,7 +326,19 @@ class Experiment:
             comm = jax.tree.map(
                 lambda *ls: jnp.stack(ls, axis=1), *[b[1] for b in per_seed]
             )
-            state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
+            if net is None:
+                realized = None
+                state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
+            else:
+                # all seeds advance through the same realized network (like
+                # the shared schedule); the matrices broadcast across the
+                # vmapped seed axis as scan-body closure constants
+                wg, ws, messages, participants = net.draw_block(start, stop)
+                realized = (messages, participants)
+                state, metrics = block_fn(
+                    state, jnp.asarray(flags), jnp.asarray(wg),
+                    jnp.asarray(ws), local, comm,
+                )
             loss = np.asarray(metrics.loss, dtype=np.float64)  # (block, seeds)
             gsq = np.asarray(metrics.grad_sq_norm, dtype=np.float64)
             cerr = np.asarray(metrics.consensus_err, dtype=np.float64)
@@ -320,11 +350,7 @@ class Experiment:
                 hist.loss.extend(loss[:, i].tolist())
                 hist.grad_sq_norm.extend(gsq[:, i].tolist())
                 hist.consensus_err.extend(cerr[:, i].tolist())
-                for f in flags:
-                    hist.is_global.append(bool(f))
-                    hist.accountant.record(
-                        bool(f), hist.byte_model.round_bytes(bool(f))
-                    )
+                record_flags(hist, flags, realized)
                 if do_eval:
                     x_bar = jax.tree.map(
                         lambda v: jnp.mean(v[i], axis=0), state.x

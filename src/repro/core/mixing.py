@@ -32,7 +32,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.topology import Topology
+from repro.core.topology import (
+    ParticipationProcess,
+    Topology,
+    TopologyProcess,
+    make_topology_process,
+)
 from repro.utils.compat import shard_map
 from repro.utils.pytree import tree_agent_mean, tree_agent_mix
 
@@ -59,6 +64,10 @@ class MixingOps:
     # function threads the stateful error-feedback variant through its state;
     # the byte model prices gossip at the compressor's wire format.
     compression: Optional[Any] = None
+    # Optional NetworkContext for time-varying topologies / partial
+    # participation: the drivers pre-draw per-round matrices host-side and
+    # thread them through the round functions (see dynamic_dense_mixing).
+    network: Optional["NetworkContext"] = None
 
 
 # ---------------------------------------------------------------------------
@@ -86,6 +95,140 @@ def identity_mixing(n_agents: int) -> MixingOps:
     return MixingOps(
         gossip=lambda t: t, global_avg=tree_agent_mean, name="identity", gossip_edges=0
     )
+
+
+# ---------------------------------------------------------------------------
+# Dynamic mixers: the mixing matrix is a per-round operand
+# ---------------------------------------------------------------------------
+
+
+class DynamicWSlot:
+    """Trace-time injection point for the per-round mixing matrices.
+
+    The algorithm builders close their round functions over
+    ``MixingOps.gossip`` / ``global_avg``; for a dynamic network those
+    closures read the *current* W_k from this slot.  The driver stores the
+    round's matrix operand here immediately before invoking the round
+    function **inside the same trace** (the scan body, or a wrapped loop
+    round function taking W as an explicit argument), so the read picks up
+    the live tracer and the compiled program threads the matrix as a real
+    input — nothing is baked in as a constant, and no algorithm needs a
+    signature change.
+    """
+
+    __slots__ = ("gossip_w", "server_w")
+
+    def __init__(self):
+        self.gossip_w = None
+        self.server_w = None
+
+    def set(self, gossip_w, server_w) -> None:
+        self.gossip_w = gossip_w
+        self.server_w = server_w
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class NetworkContext:
+    """Host-side bundle the drivers use to realize a dynamic network.
+
+    Pairs the gossip-graph process with optional partial participation and
+    the :class:`DynamicWSlot` the round functions read from.  ``draw_block``
+    pre-draws everything a scan block needs, exactly like the Bernoulli(p)
+    schedule pre-draw in :mod:`repro.core.driver`.
+    """
+
+    process: TopologyProcess
+    slot: DynamicWSlot
+    participation: Optional[ParticipationProcess] = None
+
+    @property
+    def n_agents(self) -> int:
+        return self.process.n_agents
+
+    def draw_block(self, start: int, stop: int):
+        """``(w_gossip, w_server, messages, participants)`` for rounds
+        ``[start, stop)``; matrices carry a leading round axis (scan
+        operands), counts are host ints for the byte accountant.  Without
+        participation the server matrix is a (block, 1, 1) placeholder —
+        ``global_avg`` is the exact mean and never reads it."""
+        w_gossip, messages = self.process.draw_block(start, stop)
+        block = stop - start
+        if self.participation is None:
+            w_server = np.zeros((block, 1, 1), dtype=np.float32)
+            participants = np.full(block, self.n_agents, dtype=int)
+        else:
+            w_server, participants = self.participation.draw_block(start, stop)
+        return w_gossip, w_server, messages, participants
+
+    def draw_round(self, k: int):
+        """Single-round form for the legacy loop driver."""
+        wg, ws, msgs, parts = self.draw_block(k, k + 1)
+        return wg[0], ws[0], int(msgs[0]), int(parts[0])
+
+
+def dynamic_dense_mixing(
+    process: TopologyProcess,
+    *,
+    participation: float = 1.0,
+    participation_seed: Optional[int] = None,
+) -> MixingOps:
+    """Dense mixers over a time-varying network.
+
+    ``gossip`` applies whatever W_k the driver staged in the slot for the
+    current round; ``global_avg`` is the exact mean when every agent
+    participates, else the doubly stochastic sampled-to-sampled matrix S_k
+    (participants average among themselves, absentees hold — the network
+    mean is preserved, so gradient tracking's Lemma-1 invariant survives).
+    """
+    slot = DynamicWSlot()
+    part = None
+    if participation < 1.0:
+        part = ParticipationProcess(
+            process.n_agents,
+            participation,
+            seed=process.seed if participation_seed is None else participation_seed,
+        )
+
+    def gossip(tree: PyTree) -> PyTree:
+        return tree_agent_mix(tree, slot.gossip_w)
+
+    if part is None:
+        global_avg = tree_agent_mean
+    else:
+        def global_avg(tree: PyTree) -> PyTree:
+            return tree_agent_mix(tree, slot.server_w)
+
+    base = process.base
+    name = f"dynamic/{process.spec()}/{base.name}"
+    if part is not None:
+        name += f"/m{part.m}of{part.n_agents}"
+    return MixingOps(
+        gossip=gossip,
+        global_avg=global_avg,
+        name=name,
+        gossip_edges=int(base.adj.sum()) // 2,
+        network=NetworkContext(process=process, slot=slot, participation=part),
+    )
+
+
+def make_network_mixing(
+    topology: Topology,
+    network: Optional[str] = None,
+    participation: float = 1.0,
+    *,
+    seed: int = 0,
+) -> MixingOps:
+    """Dense mixers for an optionally dynamic network — the one selection
+    point shared by ``ExperimentSpec.make_mixing`` and the launch CLI.
+
+    ``network=None`` with full participation is the legacy frozen-matrix
+    path (bit-identical to pre-dynamic runs); anything else routes through
+    :func:`dynamic_dense_mixing` over the parsed :class:`TopologyProcess`.
+    """
+    if network is None and participation >= 1.0:
+        return dense_mixing(topology)
+    process = make_topology_process(network, topology, seed=seed)
+    return dynamic_dense_mixing(process, participation=participation)
 
 
 # ---------------------------------------------------------------------------

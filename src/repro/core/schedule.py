@@ -19,14 +19,22 @@ import numpy as np
 
 @dataclasses.dataclass
 class CommAccountant:
-    """Counts communication rounds — and bytes — by kind (paper Fig. 4)."""
+    """Counts communication rounds — and bytes — by kind (paper Fig. 4).
+
+    ``per_round_bytes`` keeps the realized per-round charge in round order, so
+    bytes-to-target-accuracy readouts stay exact under dynamic networks where
+    rounds are no longer interchangeable (link failures / partial
+    participation make every round's byte cost a random variable).
+    """
 
     agent_to_agent: int = 0
     agent_to_server: int = 0
     agent_to_agent_bytes: int = 0
     agent_to_server_bytes: int = 0
+    per_round_bytes: list = dataclasses.field(default_factory=list)
 
     def record(self, is_global: bool, nbytes: int = 0) -> None:
+        self.per_round_bytes.append(int(nbytes))
         if is_global:
             self.agent_to_server += 1
             self.agent_to_server_bytes += nbytes
@@ -56,9 +64,30 @@ class RoundByteModel:
     server_round_bytes: int
     gossip_message_bytes: int = 0  # one agent's compressed message
     server_message_bytes: int = 0  # one agent's full-precision message
+    mixes_per_round: int = 1  # mixing invocations per gossip round
+    server_payloads: int = 1  # payloads per direction of a server exchange
 
     def round_bytes(self, is_global: bool) -> int:
         return self.server_round_bytes if is_global else self.gossip_round_bytes
+
+    # -- realized-network pricing (dynamic topologies / participation) ------
+
+    def realized_gossip_bytes(self, directed_messages: int) -> int:
+        """Bytes for one gossip round that realized ``directed_messages``
+        neighbor messages per mix (2 x realized undirected edges)."""
+        return self.mixes_per_round * directed_messages * self.gossip_message_bytes
+
+    def realized_server_bytes(self, participants: int) -> int:
+        """Bytes for one server round with ``participants`` agents sampled:
+        each participant uploads + downloads ``server_payloads`` payloads."""
+        return self.server_payloads * 2 * participants * self.server_message_bytes
+
+    def realized_round_bytes(
+        self, is_global: bool, directed_messages: int, participants: int
+    ) -> int:
+        if is_global:
+            return self.realized_server_bytes(participants)
+        return self.realized_gossip_bytes(directed_messages)
 
     def total_bytes(self, n_gossip_rounds: int, n_server_rounds: int) -> int:
         """Exact total for a realized schedule (what the accountant tallies)."""

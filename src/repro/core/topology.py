@@ -268,3 +268,276 @@ def make_topology(
         connected=is_connected(adj) if n_agents > 1 else True,
         shifts=_ring_shifts(w),
     )
+
+
+# ---------------------------------------------------------------------------
+# Dynamic networks: per-round topology processes (time-varying W_k)
+# ---------------------------------------------------------------------------
+
+# Domain-separation tags so link draws and participation draws at the same
+# (seed, round) never correlate.
+_LINK_TAG = 0x11AA
+_PART_TAG = 0x77EE
+
+
+def _round_rng(seed: int, tag: int, k: int) -> np.random.Generator:
+    """Per-round RNG that is a *pure function* of ``(seed, tag, k)``: every
+    driver (legacy per-round loop, chunked scan, vmapped sweep) sees the
+    identical realization for round ``k`` regardless of block boundaries."""
+    return np.random.default_rng((int(seed), int(tag), int(k)))
+
+
+def _edge_list(adj: np.ndarray) -> np.ndarray:
+    """Undirected edges (i < j) of ``adj`` in deterministic row-major order,
+    as an (m, 2) int array."""
+    i, j = np.nonzero(np.triu(adj, k=1))
+    return np.stack([i, j], axis=1) if i.size else np.zeros((0, 2), dtype=int)
+
+
+def _adj_from_edges(n: int, edges: np.ndarray) -> np.ndarray:
+    adj = np.zeros((n, n), dtype=bool)
+    if len(edges):
+        adj[edges[:, 0], edges[:, 1]] = True
+        adj[edges[:, 1], edges[:, 0]] = True
+    return adj
+
+
+class TopologyProcess:
+    """A sequence of per-round gossip graphs over a fixed base :class:`Topology`.
+
+    Each round ``k`` realizes an edge subset of the base graph and re-weights
+    it with Metropolis–Hastings weights (:func:`metropolis_weights`), whose
+    diagonal fill is exactly the *self-weight absorption* a dropped link
+    requires: the mass a failed edge would have carried moves onto ``w_ii``,
+    keeping every realization symmetric and doubly stochastic.
+
+    Realizations are drawn **host-side** and are pure functions of
+    ``(seed, k)`` — the same contract as the Bernoulli(p) schedule in
+    :mod:`repro.core.driver` — so the scan driver can pre-draw a whole block
+    (:meth:`draw_block`) and still agree round-for-round with the legacy loop.
+    """
+
+    kind = "abstract"
+
+    def __init__(self, base: Topology, seed: int = 0):
+        self.base = base
+        self.seed = int(seed)
+        self._edges = _edge_list(base.adj)
+
+    # -- interface ----------------------------------------------------------
+
+    @property
+    def n_agents(self) -> int:
+        return self.base.n_agents
+
+    @property
+    def static(self) -> bool:
+        return False
+
+    def spec(self) -> str:
+        """Round-trippable string form (parsed by :func:`make_topology_process`)."""
+        return self.kind
+
+    def edges_at(self, k: int) -> np.ndarray:
+        """(m_k, 2) realized undirected edges for round ``k``."""
+        raise NotImplementedError
+
+    # -- derived ------------------------------------------------------------
+
+    def realize(self, k: int):
+        """``(W_k, directed_messages)`` from one edge realization."""
+        edges = self.edges_at(k)
+        w = metropolis_weights(_adj_from_edges(self.n_agents, edges))
+        return w, 2 * len(edges)
+
+    def adjacency_at(self, k: int) -> np.ndarray:
+        return _adj_from_edges(self.n_agents, self.edges_at(k))
+
+    def weights_at(self, k: int) -> np.ndarray:
+        """The round-``k`` mixing matrix W_k (symmetric, doubly stochastic)."""
+        return self.realize(k)[0]
+
+    def messages_at(self, k: int) -> int:
+        """Directed neighbor messages one gossip mix moves in round ``k``."""
+        return self.realize(k)[1]
+
+    def draw_block(self, start: int, stop: int):
+        """Stacked ``(W, messages)`` for rounds ``[start, stop)``: W is
+        (block, n, n) float32 (a ``lax.scan`` operand), messages (block,) int
+        (what the byte accountant prices)."""
+        realized = [self.realize(k) for k in range(start, stop)]
+        ws = np.stack([w for w, _ in realized]).astype(np.float32)
+        msgs = np.array([m for _, m in realized])
+        return ws, msgs
+
+
+class StaticProcess(TopologyProcess):
+    """The degenerate process: the base topology's W every round (this is the
+    frozen-matrix behavior every pre-dynamic experiment had)."""
+
+    kind = "static"
+
+    @property
+    def static(self) -> bool:
+        return True
+
+    def edges_at(self, k: int) -> np.ndarray:
+        return self._edges
+
+    def realize(self, k: int):
+        # keep the base weighting (may be best_constant), skip re-realization
+        return self.base.w, 2 * len(self._edges)
+
+
+class LinkFailureProcess(TopologyProcess):
+    """I.i.d. Bernoulli link failures: each base edge drops independently with
+    probability ``failure_prob`` each round (FedDec / sampled-link regime)."""
+
+    kind = "bernoulli"
+
+    def __init__(self, base: Topology, failure_prob: float = 0.2, seed: int = 0):
+        super().__init__(base, seed)
+        assert 0.0 <= failure_prob <= 1.0
+        self.failure_prob = float(failure_prob)
+
+    def spec(self) -> str:
+        return f"bernoulli:{self.failure_prob:g}"
+
+    def edges_at(self, k: int) -> np.ndarray:
+        if self.failure_prob <= 0.0:
+            return self._edges
+        rng = _round_rng(self.seed, _LINK_TAG, k)
+        keep = rng.random(len(self._edges)) >= self.failure_prob
+        return self._edges[keep]
+
+
+class RandomMatchingProcess(TopologyProcess):
+    """One random maximal matching of the base graph per round: every agent
+    talks to at most one neighbor (the classic gossip-pairing model), so each
+    realized W_k is a disjoint union of 1/2–1/2 edge blocks."""
+
+    kind = "matching"
+
+    def edges_at(self, k: int) -> np.ndarray:
+        rng = _round_rng(self.seed, _LINK_TAG, k)
+        order = rng.permutation(len(self._edges))
+        matched = np.zeros(self.n_agents, dtype=bool)
+        picked = []
+        for e in self._edges[order]:
+            i, j = int(e[0]), int(e[1])
+            if not matched[i] and not matched[j]:
+                matched[i] = matched[j] = True
+                picked.append((i, j))
+        return np.array(picked, dtype=int) if picked else np.zeros((0, 2), int)
+
+
+class RoundRobinProcess(TopologyProcess):
+    """Deterministic cycle over ``n_parts`` edge subsets of the base graph:
+    round ``k`` gossips over part ``k % n_parts``.  One full cycle touches
+    every base edge exactly once (B-connectivity with period ``n_parts``)."""
+
+    kind = "roundrobin"
+
+    def __init__(self, base: Topology, n_parts: int = 2, seed: int = 0):
+        super().__init__(base, seed)
+        assert n_parts >= 1
+        self.n_parts = int(n_parts)
+        self._parts = [self._edges[i :: self.n_parts] for i in range(self.n_parts)]
+
+    def spec(self) -> str:
+        return f"roundrobin:{self.n_parts}"
+
+    def edges_at(self, k: int) -> np.ndarray:
+        return self._parts[k % self.n_parts]
+
+
+TOPOLOGY_PROCESSES = ("static", "bernoulli", "matching", "roundrobin")
+
+
+def parse_process_spec(spec: Optional[str]):
+    """Validate a declarative network spec and return ``(kind, arg)``.
+
+    ``spec`` is ``'static'`` | ``'bernoulli[:failure_prob]'`` | ``'matching'``
+    | ``'roundrobin[:n_parts]'`` (``None`` means static).  ExperimentSpec
+    calls this at construction so a typo fails fast, not mid-run."""
+    kind, _, arg = (spec or "static").partition(":")
+    if kind not in TOPOLOGY_PROCESSES:
+        raise ValueError(
+            f"unknown topology process {spec!r}; options: {TOPOLOGY_PROCESSES}"
+            f" (e.g. 'bernoulli:0.3', 'roundrobin:2')"
+        )
+    if arg:
+        if kind == "bernoulli":
+            q = float(arg)
+            if not 0.0 <= q <= 1.0:
+                raise ValueError(f"failure prob must be in [0, 1], got {arg}")
+            return kind, q
+        if kind == "roundrobin":
+            n = int(arg)
+            if n < 1:
+                raise ValueError(f"roundrobin needs n_parts >= 1, got {arg}")
+            return kind, n
+        raise ValueError(f"topology process {kind!r} takes no argument: {spec!r}")
+    return kind, None
+
+
+def make_topology_process(
+    spec: Optional[str], base: Topology, *, seed: int = 0
+) -> TopologyProcess:
+    """Parse a declarative network spec into a :class:`TopologyProcess`
+    (see :func:`parse_process_spec` for the grammar)."""
+    kind, arg = parse_process_spec(spec)
+    if kind == "static":
+        return StaticProcess(base, seed=seed)
+    if kind == "bernoulli":
+        return LinkFailureProcess(
+            base, failure_prob=0.2 if arg is None else arg, seed=seed
+        )
+    if kind == "matching":
+        return RandomMatchingProcess(base, seed=seed)
+    return RoundRobinProcess(base, n_parts=2 if arg is None else arg, seed=seed)
+
+
+class ParticipationProcess:
+    """Uniform m-of-n partial participation for server rounds.
+
+    Round ``k`` samples ``m = max(1, round(fraction * n))`` participants
+    without replacement; the server exchange is expressed as the doubly
+    stochastic *sampled-to-sampled* matrix
+
+        S_k[i, j] = 1/m  if i, j both participate;   S_k[i, i] = 1 otherwise.
+
+    Participants average among themselves, absentees keep their iterate.
+    Because S_k is doubly stochastic the network mean is invariant — no
+    re-scaling needed for unbiasedness: for a uniform sample,
+    ``E[(1/m) sum_{i in S} x_i] = x_bar`` exactly.  Draws are pure functions
+    of ``(seed, k)``, like :class:`TopologyProcess` realizations.
+    """
+
+    def __init__(self, n_agents: int, fraction: float, seed: int = 0):
+        assert 0.0 < fraction <= 1.0
+        self.n_agents = int(n_agents)
+        self.fraction = float(fraction)
+        self.seed = int(seed)
+        self.m = max(1, min(self.n_agents, int(round(fraction * n_agents))))
+
+    def participants_at(self, k: int) -> np.ndarray:
+        """Sorted participant indices for round ``k``."""
+        if self.m >= self.n_agents:
+            return np.arange(self.n_agents)
+        rng = _round_rng(self.seed, _PART_TAG, k)
+        return np.sort(rng.choice(self.n_agents, size=self.m, replace=False))
+
+    def server_matrix_at(self, k: int) -> np.ndarray:
+        part = self.participants_at(k)
+        s = np.eye(self.n_agents, dtype=np.float64)
+        s[np.ix_(part, part)] = 1.0 / len(part)
+        return s
+
+    def draw_block(self, start: int, stop: int):
+        """Stacked ``(S, participants)`` for rounds ``[start, stop)``."""
+        ss = np.stack(
+            [self.server_matrix_at(k) for k in range(start, stop)]
+        ).astype(np.float32)
+        counts = np.full(stop - start, self.m, dtype=int)
+        return ss, counts

@@ -25,8 +25,13 @@ import numpy as np
 from repro.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core.algorithms import get_algorithm, registered_algorithms
-from repro.core.driver import make_block_fn, predraw_schedule, sample_block
-from repro.core.mixing import dense_mixing
+from repro.core.driver import (
+    dynamic_round_fns,
+    make_block_fn,
+    predraw_schedule,
+    sample_block,
+)
+from repro.core.mixing import make_network_mixing
 from repro.core.pisco import PiscoConfig, replicate_params
 from repro.core.schedule import CommAccountant
 from repro.core.topology import make_topology
@@ -104,6 +109,11 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--topology", default="ring")
+    ap.add_argument("--network", default=None,
+                    help="dynamic-topology process: static | bernoulli[:q] | "
+                         "matching | roundrobin[:n] (default: frozen base W)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of agents sampled into each server round")
     ap.add_argument("--algo", default="pisco", choices=list(registered_algorithms()))
     ap.add_argument("--driver", default="scan", choices=["scan", "loop"],
                     help="scan: chunked on-device lax.scan; loop: legacy host loop")
@@ -122,9 +132,13 @@ def main(argv=None) -> int:
         eta_c=args.eta_c, p=args.p, seed=args.seed,
     )
     topo = make_topology(args.topology, args.n_agents)
-    mixing = dense_mixing(topo)
+    mixing = make_network_mixing(
+        topo, args.network, args.participation, seed=args.seed
+    )
     print(f"arch={cfg.name} params~{cfg.param_count():,} agents={args.n_agents} "
-          f"topology={args.topology} lambda_w={topo.lambda_w:.4f} p={args.p}")
+          f"topology={args.topology} network={args.network or 'frozen'} "
+          f"participation={args.participation:g} lambda_w={topo.lambda_w:.4f} "
+          f"p={args.p}")
 
     sampler = make_lm_sampler(cfg, args.n_agents, args.batch, args.seq, args.t_o, args.seed)
     key = jax.random.PRNGKey(args.seed)
@@ -144,18 +158,29 @@ def main(argv=None) -> int:
     local0, comm0 = sampler(-1)
     state = bound.init(bundle.loss, x0, comm0)
     t0 = time.perf_counter()
+    net = bound.network
     if args.driver == "loop":
-        gossip_fn = jax.jit(bound.gossip_round)
-        global_fn = (
-            jax.jit(bound.global_round)
-            if bound.global_round is not bound.gossip_round else gossip_fn
-        )
+        if net is not None:
+            gossip_fn, global_fn = dynamic_round_fns(bound)
+        else:
+            gossip_fn = jax.jit(bound.gossip_round)
+            global_fn = (
+                jax.jit(bound.global_round)
+                if bound.global_round is not bound.gossip_round else gossip_fn
+            )
         for k in range(start_round, args.rounds):
             local, comm = sampler(k)
             is_global = bool(bound.schedule(k))
             acct.record(is_global)
             fn = global_fn if is_global else gossip_fn
-            state, metrics = fn(state, local, comm)
+            if net is not None:
+                w_gossip, w_server, _, _ = net.draw_round(k)
+                state, metrics = fn(
+                    state, local, comm,
+                    jnp.asarray(w_gossip), jnp.asarray(w_server),
+                )
+            else:
+                state, metrics = fn(state, local, comm)
             if k % args.log_every == 0 or k == args.rounds - 1:
                 print(
                     f"round {k:4d} [{'J' if is_global else 'W'}] "
@@ -181,7 +206,14 @@ def main(argv=None) -> int:
                 stop = min(stop, (k // args.ckpt_every + 1) * args.ckpt_every)
             flags = predraw_schedule(bound.schedule, k, stop)
             local, comm = sample_block(sampler, k, stop)
-            state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
+            if net is not None:
+                w_gossip, w_server, _, _ = net.draw_block(k, stop)
+                state, metrics = block_fn(
+                    state, jnp.asarray(flags), jnp.asarray(w_gossip),
+                    jnp.asarray(w_server), local, comm,
+                )
+            else:
+                state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
             for f in flags:
                 acct.record(bool(f))
             k_end = stop - 1

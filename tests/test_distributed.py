@@ -8,6 +8,9 @@ import textwrap
 
 import pytest
 
+# slow: excluded from the quick lane; distributed: runs in its own CI job
+pytestmark = [pytest.mark.slow, pytest.mark.distributed]
+
 _SCRIPT = textwrap.dedent(
     """
     import os
@@ -101,7 +104,6 @@ _SCRIPT = textwrap.dedent(
 )
 
 
-@pytest.mark.slow
 def test_collective_mixers_match_dense_in_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -114,7 +116,6 @@ def test_collective_mixers_match_dense_in_subprocess():
     assert "DISTRIBUTED-OK" in proc.stdout
 
 
-@pytest.mark.slow
 def test_dryrun_small_pair_compiles():
     """End-to-end dry-run of one cheap pair on the 512-device mesh."""
     env = dict(os.environ)

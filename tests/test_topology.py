@@ -5,6 +5,10 @@ from _hyp import given, settings, st
 
 from repro.core.topology import (
     GRAPHS,
+    ParticipationProcess,
+    RoundRobinProcess,
+    StaticProcess,
+    TOPOLOGY_PROCESSES,
     Topology,
     best_constant_weights,
     erdos_renyi_graph,
@@ -13,9 +17,11 @@ from repro.core.topology import (
     is_connected,
     is_doubly_stochastic,
     make_topology,
+    make_topology_process,
     metropolis_weights,
     mixing_rate,
     ring_graph,
+    second_singular_value,
     torus_graph,
 )
 
@@ -103,3 +109,172 @@ def test_best_constant_on_ring_beats_or_matches_metropolis():
     ring_m = make_topology("ring", 16, "metropolis")
     ring_b = make_topology("ring", 16, "best_constant")
     assert ring_b.lambda_w >= ring_m.lambda_w - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Dynamic networks: TopologyProcess realizations (property-based)
+# ---------------------------------------------------------------------------
+
+PROCESS_SPECS = ["static", "bernoulli:0.3", "matching", "roundrobin:2"]
+PROCESS_NS = [1, 2, 3, 8, 16]
+
+
+@given(
+    n=st.sampled_from(PROCESS_NS),
+    spec=st.sampled_from(PROCESS_SPECS),
+    k=st.integers(0, 40),
+    seed=st.integers(0, 20),
+)
+@settings(max_examples=60, deadline=None)
+def test_process_realizations_are_valid_mixing_matrices(n, spec, k, seed):
+    """Every realized W_k is symmetric, doubly stochastic, supported only on
+    base-graph edges, and satisfies its own §2.1 contraction bound."""
+    base = make_topology("ring", n)
+    proc = make_topology_process(spec, base, seed=seed)
+    w = proc.weights_at(k)
+    assert w.shape == (n, n)
+    assert is_doubly_stochastic(w)
+    assert np.allclose(w, w.T)
+    off_support = (np.abs(w) > 1e-12) & ~np.eye(n, dtype=bool)
+    assert not np.any(off_support & ~base.adj), "gossip over a non-edge"
+    lam = mixing_rate(w)
+    assert -1e-9 <= lam <= 1.0 + 1e-9
+    # per-realization contraction at the realization's own rate
+    rng = np.random.default_rng(seed + 1)
+    x = rng.normal(size=(n, 3))
+    xbar = x.mean(axis=0, keepdims=True)
+    lhs = np.sum((w @ x - xbar) ** 2)
+    rhs = (1.0 - lam) * np.sum((x - xbar) ** 2)
+    assert lhs <= rhs + 1e-9
+
+
+@given(
+    n=st.sampled_from([2, 3, 8, 16]),
+    spec=st.sampled_from(PROCESS_SPECS),
+    seed=st.integers(0, 10),
+)
+@settings(max_examples=30, deadline=None)
+def test_process_time_average_mixes_at_least_as_well_as_worst_draw(n, spec, seed):
+    """||mean_t W_t - J|| <= max_t ||W_t - J|| (convexity of the operator
+    norm), i.e. the time-averaged matrix's mixing rate is bounded below by
+    the worst single realization — the dynamic analogue of the static bound.
+    For the static process this is equality with the base graph's rate."""
+    base = make_topology("ring", n)
+    proc = make_topology_process(spec, base, seed=seed)
+    draws = [proc.weights_at(k) for k in range(12)]
+    w_bar = np.mean(draws, axis=0)
+    worst = max(second_singular_value(w) for w in draws)
+    assert second_singular_value(w_bar) <= worst + 1e-9
+    assert mixing_rate(w_bar) >= min(mixing_rate(w) for w in draws) - 1e-9
+    if spec == "static":
+        assert mixing_rate(w_bar) == pytest.approx(base.lambda_w, abs=1e-9)
+
+
+def test_static_process_reproduces_base_topology():
+    base = make_topology("ring", 8, "best_constant")
+    proc = make_topology_process("static", base)
+    assert isinstance(proc, StaticProcess) and proc.static
+    for k in (0, 3, 17):
+        np.testing.assert_array_equal(proc.weights_at(k), base.w)
+        assert proc.messages_at(k) == int(base.adj.sum())
+
+
+def test_bernoulli_process_failure_prob_limits():
+    base = make_topology("ring", 8)
+    keep_all = make_topology_process("bernoulli:0.0", base, seed=1)
+    drop_all = make_topology_process("bernoulli:1.0", base, seed=1)
+    for k in range(4):
+        np.testing.assert_array_equal(keep_all.adjacency_at(k), base.adj)
+        assert drop_all.messages_at(k) == 0
+        np.testing.assert_array_equal(drop_all.weights_at(k), np.eye(8))
+
+
+def test_matching_process_realizes_disjoint_pairs():
+    base = make_topology("full", 8)
+    proc = make_topology_process("matching", base, seed=3)
+    for k in range(6):
+        edges = proc.edges_at(k)
+        flat = edges.ravel()
+        assert len(flat) == len(set(flat.tolist())), "agent in two pairs"
+        # maximal on the complete graph: n/2 pairs
+        assert len(edges) == 4
+        w = proc.weights_at(k)
+        matched = sorted(flat.tolist())
+        for i, j in edges:
+            assert w[i, j] == pytest.approx(0.5)
+
+
+def test_roundrobin_cycle_covers_every_base_edge_once():
+    base = make_topology("ring", 10)
+    proc = make_topology_process("roundrobin:3", base, seed=0)
+    assert isinstance(proc, RoundRobinProcess)
+    union = np.zeros_like(base.adj)
+    total_edges = 0
+    for k in range(3):
+        union |= proc.adjacency_at(k)
+        total_edges += len(proc.edges_at(k))
+    np.testing.assert_array_equal(union, base.adj)
+    assert total_edges == int(base.adj.sum()) // 2
+    # deterministic cycle
+    np.testing.assert_array_equal(proc.weights_at(0), proc.weights_at(3))
+
+
+@given(spec=st.sampled_from(PROCESS_SPECS), seed=st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_process_draws_are_pure_functions_of_seed_and_round(spec, seed):
+    """Block draws equal per-round draws and re-instantiation: the contract
+    that makes the loop and scan drivers agree under any block boundaries."""
+    base = make_topology("ring", 8)
+    p1 = make_topology_process(spec, base, seed=seed)
+    p2 = make_topology_process(spec, base, seed=seed)
+    ws, msgs = p1.draw_block(2, 7)
+    for i, k in enumerate(range(2, 7)):
+        np.testing.assert_allclose(ws[i], p2.weights_at(k).astype(np.float32))
+        assert msgs[i] == p2.messages_at(k)
+
+
+def test_make_topology_process_rejects_unknown_kind():
+    base = make_topology("ring", 4)
+    with pytest.raises(ValueError, match="unknown topology process"):
+        make_topology_process("smallworld", base)
+    assert set(TOPOLOGY_PROCESSES) == {"static", "bernoulli", "matching", "roundrobin"}
+
+
+# ---------------------------------------------------------------------------
+# Partial participation
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.sampled_from(PROCESS_NS),
+    frac=st.floats(0.1, 1.0),
+    k=st.integers(0, 20),
+    seed=st.integers(0, 10),
+)
+@settings(max_examples=40, deadline=None)
+def test_participation_matrix_is_doubly_stochastic_sampling(n, frac, k, seed):
+    proc = ParticipationProcess(n, frac, seed=seed)
+    assert 1 <= proc.m <= n
+    part = proc.participants_at(k)
+    assert len(part) == proc.m == len(set(part.tolist()))
+    s = proc.server_matrix_at(k)
+    assert is_doubly_stochastic(s)
+    assert np.allclose(s, s.T)
+    # participants average among themselves, absentees hold
+    absent = np.setdiff1d(np.arange(n), part)
+    for i in absent:
+        assert s[i, i] == pytest.approx(1.0)
+    x = np.random.default_rng(seed).normal(size=(n, 2))
+    np.testing.assert_allclose((s @ x).mean(axis=0), x.mean(axis=0), atol=1e-12)
+
+
+def test_participation_draws_are_deterministic_and_vary_by_round():
+    p1 = ParticipationProcess(16, 0.25, seed=4)
+    p2 = ParticipationProcess(16, 0.25, seed=4)
+    ss, counts = p1.draw_block(0, 8)
+    assert counts.tolist() == [4] * 8
+    sets = set()
+    for i in range(8):
+        np.testing.assert_allclose(ss[i], p2.server_matrix_at(i).astype(np.float32))
+        sets.add(tuple(p2.participants_at(i).tolist()))
+    assert len(sets) > 1, "participation never resampled"

@@ -75,6 +75,10 @@ def run_pisco_variant(
     driver: str = "scan",
     network: Optional[str] = None,
     participation: float = 1.0,
+    optimizer: Optional[str] = None,
+    server_optimizer: Optional[str] = None,
+    lr_schedule: Optional[str] = None,
+    opt_policy: Optional[str] = None,
 ):
     spec = ExperimentSpec.create(
         algo=algo,
@@ -90,6 +94,10 @@ def run_pisco_variant(
         participation=participation,
         compression=compression,
         error_feedback=error_feedback,
+        optimizer=optimizer,
+        server_optimizer=server_optimizer,
+        lr_schedule=lr_schedule,
+        opt_policy=opt_policy,
         rounds=rounds,
         eval_every=eval_every,
         driver=driver,

@@ -1,0 +1,113 @@
+"""Optimizer sweep: pluggable local/server update rules × server probability.
+
+The paper studies plain tracked-SGD only; with the update-rule API
+(DESIGN.md §10) the same PISCO substrate runs adaptive local steps and
+FedOpt-style server rounds.  This sweep crosses
+
+    local  ∈ {sgd, momentum, adam}      (the tracker is the descent direction)
+    server ∈ {none, fedavgm, fedadam}   (fires at global-averaging rounds)
+    p      ∈ {0.05, 0.2}                (agent-to-server probability)
+
+on the §5.1 logreg workload and reads out rounds/bytes-to-target plus final
+gradient norm, pricing the extra traffic honestly (a server rule ships one
+extra payload per direction; mixed momentum buffers ride the gossip links).
+
+Emits ``BENCH_optimizers.json`` under ``artifacts/bench/``.
+
+    PYTHONPATH=src python -m benchmarks.fig_optimizers [--quick]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_logreg_workload, run_pisco_variant, save_result
+
+LOCAL_RULES = [None, "momentum:lr=0.1", "adam:lr=0.05"]
+SERVER_RULES = [None, "fedavgm", "fedadam"]
+P_GRID = [0.05, 0.2]
+
+
+def _label(rule):
+    return "sgd" if rule is None else rule.split(":")[0]
+
+
+def _cell_readout(hist, grad_target: float) -> dict:
+    acct = hist.accountant
+    cum_bytes = np.cumsum(acct.per_round_bytes)
+    r = hist.rounds_to_threshold("grad_sq", grad_target, mode="running_le")
+    return {
+        "rounds_to_target": None if r is None else r + 1,
+        "bytes_to_target": None if r is None else int(cum_bytes[r]),
+        "total_bytes": int(acct.total_bytes),
+        "server_rounds": int(acct.agent_to_server),
+        "final_grad_sq": float(hist.grad_sq_norm[-1]),
+        "final_loss": float(hist.loss[-1]),
+    }
+
+
+def run(quick: bool = False, seed: int = 0) -> dict:
+    rounds = 120 if quick else 500
+    locals_ = LOCAL_RULES[:2] if quick else LOCAL_RULES
+    servers = SERVER_RULES[:2] if quick else SERVER_RULES
+    ps = [0.2] if quick else P_GRID
+    grad_target = 0.01 if quick else 0.002
+
+    data, loss_fn, eval_fn, params0 = make_logreg_workload(quick=quick, seed=seed)
+    results = {}
+    for p in ps:
+        for local in locals_:
+            for server in servers:
+                hist, _ = run_pisco_variant(
+                    data=data, loss_fn=loss_fn, eval_fn=eval_fn,
+                    params0=params0, p=p, t_o=2, eta_l=0.3, rounds=rounds,
+                    seed=seed,
+                    optimizer=local, server_optimizer=server,
+                )
+                key = (
+                    f"local={_label(local)},"
+                    f"server={server or 'none'},p={p:.2f}"
+                )
+                results[key] = _cell_readout(hist, grad_target)
+    payload = {"bench": "fig_optimizers", "quick": quick, "results": results}
+    save_result("BENCH_optimizers", payload)
+    return payload
+
+
+def best_adaptive_speedup(results: dict):
+    """Rounds-to-target speedup of the best non-SGD cell over the plain-SGD
+    cell at the same p (None if either never reached the target)."""
+    speedups = []
+    for key, cell in results.items():
+        if key.startswith("local=sgd,server=none") or not cell["rounds_to_target"]:
+            continue
+        p_tag = key.split(",p=")[1]
+        base = results.get(f"local=sgd,server=none,p={p_tag}")
+        if base and base["rounds_to_target"]:
+            speedups.append(base["rounds_to_target"] / cell["rounds_to_target"])
+    return max(speedups) if speedups else None
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    payload = run(quick=args.quick)
+    print(f"{'scenario':>38} | {'rounds':>7} {'MB@target':>10} {'final |g|^2':>12}")
+    for key, cell in payload["results"].items():
+        rt = cell["rounds_to_target"]
+        bt = cell["bytes_to_target"]
+        print(
+            f"{key:>38} | "
+            f"{rt if rt is not None else '---':>7} "
+            f"{bt / 1e6 if bt is not None else float('nan'):10.3f} "
+            f"{cell['final_grad_sq']:12.3e}"
+        )
+    s = best_adaptive_speedup(payload["results"])
+    if s:
+        print(f"best adaptive rounds-to-target speedup vs plain SGD: {s:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

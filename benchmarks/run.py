@@ -20,7 +20,7 @@ def _row(name: str, seconds: float, derived: str) -> None:
 # are opt-in (not part of the default sweep).
 KNOWN = (
     "fig4", "fig5", "fig6", "fig7", "table2", "roofline", "compression",
-    "dynamic", "ablation", "driver",
+    "dynamic", "optimizers", "ablation", "driver",
 )
 
 
@@ -127,6 +127,18 @@ def main() -> None:
             "fig_dynamic",
             time.perf_counter() - t0,
             f"server_byte_savings_half_part={saving:.2f}x" if saving else "n/a",
+        )
+
+    if only is None or "optimizers" in only:
+        from benchmarks import fig_optimizers
+
+        t0 = time.perf_counter()
+        payload = fig_optimizers.run(quick=quick)
+        s = fig_optimizers.best_adaptive_speedup(payload["results"])
+        _row(
+            "fig_optimizers",
+            time.perf_counter() - t0,
+            f"best_adaptive_speedup={s:.2f}x" if s else "n/a",
         )
 
     if only is None or "table2" in only:

@@ -69,6 +69,28 @@ def main():
     accs = [h.eval_metrics[-1]["test_acc"] for h in hists]
     print(f"3-seed test acc: {min(accs):.3f} .. {max(accs):.3f}")
 
+    # 6. Pluggable update rules (DESIGN.md §10): FedAdam-over-gossip — local
+    #    momentum on the tracker, server-side Adam firing at the Bernoulli(p)
+    #    global-averaging rounds.  Same spec, two more declarative fields.
+    fed_spec = spec.replace(
+        optimizer="momentum:lr=0.1", server_optimizer="fedadam"
+    )
+    fed_hist = Experiment(
+        fed_spec,
+        loss_fn=loss_fn,
+        params0={"w": jnp.zeros(x.shape[1])},
+        sampler_factory=lambda s: RoundSampler(
+            data, batch_size=128, t_o=s.config.t_o, seed=s.config.seed
+        ),
+        eval_fn=eval_fn,
+    ).run()
+    print(
+        f"FedAdam-over-gossip: global loss "
+        f"{fed_hist.eval_metrics[0]['global_loss']:.4f} -> "
+        f"{fed_hist.eval_metrics[-1]['global_loss']:.4f} "
+        f"(acc {fed_hist.eval_metrics[-1]['test_acc']:.3f})"
+    )
+
 
 if __name__ == "__main__":
     main()

@@ -53,6 +53,13 @@ def main():
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--eta-l", type=float, default=0.1)
+    ap.add_argument("--local-opt", default=None,
+                    help="local update rule, e.g. momentum | adam:lr=0.01 "
+                         "(default: hardcoded tracked-SGD)")
+    ap.add_argument("--server-opt", default=None,
+                    help="FedOpt server rule, e.g. fedavgm | fedadam")
+    ap.add_argument("--lr-schedule", default=None,
+                    help="local-LR decay: linear | cosine | warmup_cosine")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args()
@@ -90,8 +97,17 @@ def main():
     topo = make_topology("ring", args.n_agents)
     mixing = dense_mixing(topo)
     # Registry API: one bound algorithm (round fns + Bernoulli(p) schedule +
-    # comm profile), one jitted scan over each block of rounds.
-    bound = get_algorithm("pisco").bind(bundle.loss, pcfg, mixing)
+    # comm profile), one jitted scan over each block of rounds.  The same
+    # UpdateRule API that drives the logreg experiments plugs in here — e.g.
+    # `--local-opt momentum --server-opt fedadam` is PISCO-M with FedAdam
+    # server rounds on a 126M-param LM.
+    from repro.optim import resolve_update_rules
+
+    opt_kw = resolve_update_rules(
+        args.local_opt, args.server_opt, args.lr_schedule,
+        eta_l=args.eta_l, rounds=args.rounds, t_o=args.t_o,
+    )
+    bound = get_algorithm("pisco").bind(bundle.loss, pcfg, mixing, **opt_kw)
     block_fn = make_block_fn(bound)
     acct = CommAccountant()
 

@@ -48,10 +48,14 @@ from repro.core.pisco import (
     make_round_fn,
 )
 from repro.core.schedule import PeriodicSchedule, make_schedule
+from repro.optim.update_rules import OPT_POLICIES, UpdateRule, parse_update_rule
 
 PyTree = Any
-# builder(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0)
+# builder(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0
+#         [, local_opt=None, server_opt=None, opt_policy="..."])
 #   -> (init, gossip_round, global_round)
+# The optimizer kwargs are only passed when update rules are actually bound,
+# so legacy builders (and third-party registrations) keep working unchanged.
 Builder = Callable[..., Tuple[Callable, Callable, Callable]]
 
 SCHEDULE_KINDS = ("bernoulli", "never", "always", "periodic")
@@ -92,6 +96,11 @@ class BoundAlgorithm:
     # it and thread them into the round functions.  None => static network,
     # the exact pre-dynamic code path.
     network: Optional[Any] = None
+    # The resolved update rules this binding runs (None/None => the legacy
+    # hardcoded-SGD arithmetic) and the opt-state communication policy.
+    local_opt: Optional[UpdateRule] = None
+    server_opt: Optional[UpdateRule] = None
+    opt_policy: str = "mix"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,11 +120,23 @@ class Algorithm:
     schedule: str = "bernoulli"
     avg_period: int = 10
     description: str = ""
+    # Default update rules, as declarative strings parsed at bind time
+    # (None => the legacy hardcoded-SGD path); ``opt_policy`` is what happens
+    # to agent-stacked optimizer buffers at communication rounds (DESIGN.md
+    # §10): "mix" with the round's W/J, "keep" local, or "reset" at server
+    # synchronizations.
+    local_opt: Optional[str] = None
+    server_opt: Optional[str] = None
+    opt_policy: str = "mix"
 
     def __post_init__(self):
         if self.schedule not in SCHEDULE_KINDS:
             raise ValueError(
                 f"schedule {self.schedule!r} not in {SCHEDULE_KINDS}"
+            )
+        if self.opt_policy not in OPT_POLICIES:
+            raise ValueError(
+                f"opt_policy {self.opt_policy!r} not in {OPT_POLICIES}"
             )
 
     def make_default_schedule(self, cfg: PiscoConfig):
@@ -139,11 +160,53 @@ class Algorithm:
         eta: Optional[float] = None,
         eta_g: float = 1.0,
         schedule: Optional[Callable[[int], bool]] = None,
+        local_opt: Optional[Any] = None,
+        server_opt: Optional[Any] = None,
+        opt_policy: Optional[str] = None,
     ) -> BoundAlgorithm:
         """Close the algorithm over a concrete problem; ``schedule`` overrides
-        the declarative default (e.g. a replayed flag sequence)."""
+        the declarative default (e.g. a replayed flag sequence).
+
+        ``local_opt`` / ``server_opt`` accept an :class:`UpdateRule` or its
+        declarative string form, overriding the registry entry's defaults;
+        both unresolved (the default) runs the legacy hardcoded-SGD
+        arithmetic bit-for-bit.  When rules are bound, the comm profile is
+        re-priced as data: a server rule ships one extra payload per
+        direction (the previous averaged iterate feeding the pseudo-
+        gradient), and the "mix" policy moves each params-shaped optimizer
+        buffer through the network alongside the model.
+        """
+        lo = local_opt if local_opt is not None else self.local_opt
+        so = server_opt if server_opt is not None else self.server_opt
+        policy = opt_policy if opt_policy is not None else self.opt_policy
+        if policy not in OPT_POLICIES:
+            raise ValueError(f"opt_policy {policy!r} not in {OPT_POLICIES}")
+        if isinstance(lo, str):
+            lo = parse_update_rule(lo, lr=cfg.eta_l if eta is None else eta)
+        if isinstance(so, str):
+            so = parse_update_rule(so, lr=eta_g)
+        if so is not None and lo is None:
+            # a server rule alone still runs the rule path; materialize the
+            # default local rule so init and round functions agree on state
+            lo = parse_update_rule("sgd", lr=cfg.eta_l if eta is None else eta)
+
+        opt_kw = {}
+        comm = self.comm
+        if lo is not None or so is not None:
+            opt_kw = dict(local_opt=lo, server_opt=so, opt_policy=policy)
+            if so is not None:
+                comm = dataclasses.replace(
+                    comm, server_payloads=comm.server_payloads + 1
+                )
+            n_buffers = lo.n_buffers if lo is not None else 0
+            if n_buffers and policy == "mix":
+                comm = dataclasses.replace(
+                    comm,
+                    mixes_per_round=comm.mixes_per_round + n_buffers,
+                    server_payloads=comm.server_payloads + n_buffers,
+                )
         init, gossip, glob = self.build(
-            self, loss_fn, cfg, mixing, eta=eta, eta_g=eta_g
+            self, loss_fn, cfg, mixing, eta=eta, eta_g=eta_g, **opt_kw
         )
         return BoundAlgorithm(
             name=self.name,
@@ -152,8 +215,11 @@ class Algorithm:
             global_round=glob,
             schedule=schedule if schedule is not None else
             self.make_default_schedule(cfg),
-            comm=self.comm,
+            comm=comm,
             network=getattr(mixing, "network", None),
+            local_opt=lo,
+            server_opt=so,
+            opt_policy=policy,
         )
 
 
@@ -169,6 +235,9 @@ def register_algorithm(
     uses_local_updates: bool = True,
     schedule: str = "bernoulli",
     avg_period: int = 10,
+    local_opt: Optional[str] = None,
+    server_opt: Optional[str] = None,
+    opt_policy: str = "mix",
     description: str = "",
 ) -> Callable[[Builder], Builder]:
     """Decorator registering a builder under ``name``.
@@ -176,6 +245,10 @@ def register_algorithm(
     ``server_payloads`` defaults to ``mixes_per_round`` — a protocol that
     mixes two streams over gossip links generally ships both streams through
     the server too (PISCO/DSGT move X and Y; SCAFFOLD the model and variate).
+
+    ``local_opt`` / ``server_opt`` are default update-rule strings (e.g. a
+    PISCO-M entry would register ``local_opt="momentum"``); ``opt_policy``
+    is the entry's opt-state communication policy when rules are bound.
     """
 
     def deco(build: Builder) -> Builder:
@@ -194,6 +267,9 @@ def register_algorithm(
             ),
             schedule=schedule,
             avg_period=avg_period,
+            local_opt=local_opt,
+            server_opt=server_opt,
+            opt_policy=opt_policy,
             description=description or (build.__doc__ or "").strip(),
         )
         return build
@@ -229,12 +305,18 @@ def registered_algorithms() -> Tuple[str, ...]:
     mixes_per_round=2,
     description="PISCO (Algorithm 1): tracked local updates + Bernoulli(p) server",
 )
-def _build_pisco(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+def _build_pisco(
+    spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0,
+    local_opt=None, server_opt=None, opt_policy="mix",
+):
     del spec, eta, eta_g
+    opt_kw = dict(local_opt=local_opt, server_opt=server_opt, opt_policy=opt_policy)
     return (
-        lambda lf, x0, b0: init_compression_state(init_state(lf, x0, b0), mixing),
-        make_round_fn(loss_fn, cfg, mixing, global_round=False),
-        make_round_fn(loss_fn, cfg, mixing, global_round=True),
+        lambda lf, x0, b0: init_compression_state(
+            init_state(lf, x0, b0, local_opt, server_opt), mixing
+        ),
+        make_round_fn(loss_fn, cfg, mixing, global_round=False, **opt_kw),
+        make_round_fn(loss_fn, cfg, mixing, global_round=True, **opt_kw),
     )
 
 
@@ -244,12 +326,21 @@ def _build_pisco(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
     schedule="never",
     description="Periodical-GT [LLKS24]: PISCO with p = 0 (gossip every round)",
 )
-def _build_periodical_gt(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+def _build_periodical_gt(
+    spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0,
+    local_opt=None, server_opt=None, opt_policy="mix",
+):
     del spec, eta, eta_g
-    fn = B.make_periodical_gt_round_fn(loss_fn, cfg, mixing)
+    fn = B.make_periodical_gt_round_fn(
+        loss_fn, cfg, mixing,
+        local_opt=local_opt, server_opt=server_opt, opt_policy=opt_policy,
+    )
     # init_state (not dsgt_init): the round fn carries a PiscoState, and the
     # scan driver needs the carry pytree type to match it exactly.
-    return init_state, fn, fn
+    def init(lf, x0, b0):
+        return init_state(lf, x0, b0, local_opt, server_opt)
+
+    return init, fn, fn
 
 
 @register_algorithm(
@@ -258,13 +349,38 @@ def _build_periodical_gt(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
     uses_local_updates=False,
     description="DSGT [PN21]: gradient tracking, one step per round",
 )
-def _build_dsgt(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+def _build_dsgt(
+    spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0,
+    local_opt=None, server_opt=None, opt_policy="mix",
+):
     del spec, eta_g
     eta = cfg.eta_l if eta is None else eta
+    opt_kw = dict(local_opt=local_opt, server_opt=server_opt, opt_policy=opt_policy)
+
+    def init(lf, x0, b0):
+        return B.dsgt_init(lf, x0, b0, local_opt, server_opt)
+
     return (
-        B.dsgt_init,
-        B.make_dsgt_round_fn(loss_fn, eta, mixing, global_round=False),
-        B.make_dsgt_round_fn(loss_fn, eta, mixing, global_round=True),
+        init,
+        B.make_dsgt_round_fn(loss_fn, eta, mixing, global_round=False, **opt_kw),
+        B.make_dsgt_round_fn(loss_fn, eta, mixing, global_round=True, **opt_kw),
+    )
+
+
+def _build_dsgd_family(loss_fn, cfg, mixing, eta, local_opt, server_opt, opt_policy):
+    opt_kw = dict(local_opt=local_opt, server_opt=server_opt, opt_policy=opt_policy)
+
+    def init(lf, x0, b0):
+        return B.dsgd_init(lf, x0, b0, local_opt, server_opt)
+
+    return (
+        init,
+        B.make_dsgd_round_fn(
+            loss_fn, eta, mixing, global_round=False, t_o=cfg.t_o, **opt_kw
+        ),
+        B.make_dsgd_round_fn(
+            loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o, **opt_kw
+        ),
     )
 
 
@@ -275,13 +391,14 @@ def _build_dsgt(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
     schedule="never",
     description="DSGD [NO09]: gossip SGD",
 )
-def _build_dsgd(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+def _build_dsgd(
+    spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0,
+    local_opt=None, server_opt=None, opt_policy="mix",
+):
     del spec, eta_g
     eta = cfg.eta_l if eta is None else eta
-    return (
-        B.dsgd_init,
-        B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=False, t_o=cfg.t_o),
-        B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o),
+    return _build_dsgd_family(
+        loss_fn, cfg, mixing, eta, local_opt, server_opt, opt_policy
     )
 
 
@@ -293,13 +410,14 @@ def _build_dsgd(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
     avg_period=10,
     description="Gossip-PGA [CYZ+21]: gossip SGD + periodic global averaging",
 )
-def _build_gossip_pga(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+def _build_gossip_pga(
+    spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0,
+    local_opt=None, server_opt=None, opt_policy="mix",
+):
     del spec, eta_g
     eta = cfg.eta_l if eta is None else eta
-    return (
-        B.dsgd_init,
-        B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=False, t_o=cfg.t_o),
-        B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o),
+    return _build_dsgd_family(
+        loss_fn, cfg, mixing, eta, local_opt, server_opt, opt_policy
     )
 
 
@@ -308,13 +426,24 @@ def _build_gossip_pga(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
     mixes_per_round=1,
     server_based=True,
     schedule="always",
+    opt_policy="reset",
     description="FedAvg [MMR+17]: local SGD + server averaging every round",
 )
-def _build_fedavg(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+def _build_fedavg(
+    spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0,
+    local_opt=None, server_opt=None, opt_policy="reset",
+):
     del spec, eta_g
     eta = cfg.eta_l if eta is None else eta
-    s = B.make_dsgd_round_fn(loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o)
-    return B.dsgd_init, s, s
+
+    def init(lf, x0, b0):
+        return B.dsgd_init(lf, x0, b0, local_opt, server_opt)
+
+    s = B.make_dsgd_round_fn(
+        loss_fn, eta, mixing, global_round=True, t_o=cfg.t_o,
+        local_opt=local_opt, server_opt=server_opt, opt_policy=opt_policy,
+    )
+    return init, s, s
 
 
 @register_algorithm(
@@ -322,9 +451,20 @@ def _build_fedavg(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
     mixes_per_round=2,
     server_based=True,
     schedule="always",
+    opt_policy="reset",
     description="SCAFFOLD [KKM+20]: model + control variate per server exchange",
 )
-def _build_scaffold(spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0):
+def _build_scaffold(
+    spec, loss_fn, cfg, mixing, *, eta=None, eta_g=1.0,
+    local_opt=None, server_opt=None, opt_policy="reset",
+):
     del spec, eta
-    fn = B.make_scaffold_round_fn(loss_fn, cfg.eta_l, eta_g, cfg.t_o, mixing)
-    return B.scaffold_init, fn, fn
+
+    def init(lf, x0, b0):
+        return B.scaffold_init(lf, x0, b0, local_opt, server_opt)
+
+    fn = B.make_scaffold_round_fn(
+        loss_fn, cfg.eta_l, eta_g, cfg.t_o, mixing,
+        local_opt=local_opt, server_opt=server_opt, opt_policy=opt_policy,
+    )
+    return init, fn, fn

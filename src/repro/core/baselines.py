@@ -14,11 +14,18 @@ functions, and host-side schedules.  Implemented:
 
 Each exposes ``init(loss_fn, x0, batch0)`` and round functions with the same
 signature as PISCO's, so the shared trainer drives any of them.
+
+Every baseline takes the same pluggable-optimizer hooks as PISCO
+(``local_opt`` / ``server_opt`` / ``opt_policy``, DESIGN.md §10): the local
+rule replaces the hardcoded ``x - eta * g`` descent, the server rule turns
+global-averaging rounds into FedOpt updates (FedAvg + ``server_opt=fedadam``
+*is* FedAdam), and both ``None`` keeps the historical inline arithmetic
+bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +39,14 @@ from repro.core.pisco import (
     make_round_fn,
     make_stacked_value_and_grad,
     init_state as pisco_init_state,
+)
+from repro.optim.update_rules import (
+    UpdateRule,
+    apply_updates,
+    comm_opt_state,
+    init_opt_state,
+    server_step,
+    sgd as sgd_rule,
 )
 from repro.utils.pytree import tree_add, tree_sub, tree_sq_norm
 
@@ -56,11 +71,21 @@ def _metrics(loss, g_stacked, x) -> RoundMetrics:
 class SGDState(NamedTuple):
     x: PyTree
     step: jnp.ndarray
+    opt: PyTree = ()  # () legacy | {"local": ..., "server": ...} with rules
 
 
-def dsgd_init(loss_fn: LossFn, x0: PyTree, batch0: Any) -> SGDState:
+def dsgd_init(
+    loss_fn: LossFn,
+    x0: PyTree,
+    batch0: Any,
+    local_opt: Optional[UpdateRule] = None,
+    server_opt: Optional[UpdateRule] = None,
+) -> SGDState:
     del loss_fn, batch0
-    return SGDState(x=x0, step=jnp.zeros((), jnp.int32))
+    return SGDState(
+        x=x0, step=jnp.zeros((), jnp.int32),
+        opt=init_opt_state(x0, local_opt, server_opt),
+    )
 
 
 def make_dsgd_round_fn(
@@ -70,13 +95,21 @@ def make_dsgd_round_fn(
     *,
     global_round: bool,
     t_o: int = 1,
+    local_opt: Optional[UpdateRule] = None,
+    server_opt: Optional[UpdateRule] = None,
+    opt_policy: str = "mix",
 ) -> Callable:
     """One DSGD round: ``x <- mix(x - eta g)`` (T_o local SGD steps first when
-    t_o > 1, which with global mixing == FedAvg / local SGD)."""
+    t_o > 1, which with global mixing == FedAvg / local SGD).  With rules
+    bound, the descent step is the local rule and a server rule makes the
+    global round a FedOpt update (FedAvg + fedadam == FedAdam)."""
     stacked_vg = make_stacked_value_and_grad(loss_fn)
     mix = mixing.global_avg if global_round else mixing.gossip
+    has_rules = local_opt is not None or server_opt is not None
+    if has_rules and local_opt is None:
+        local_opt = sgd_rule(eta)
 
-    def round_fn(state: SGDState, local_batches, comm_batch):
+    def legacy_round_fn(state: SGDState, local_batches, comm_batch):
         def step(x, batch_t):
             loss, g = stacked_vg(x, batch_t)
             x = jax.tree.map(lambda xi, gi: xi - eta * gi, x, g)
@@ -88,12 +121,48 @@ def make_dsgd_round_fn(
         loss_c, g_c = stacked_vg(x, comm_batch)
         x = jax.tree.map(lambda xi, gi: xi - eta * gi, x, g_c)
         x = mix(x)
-        new_state = SGDState(x=x, step=state.step + 1)
+        new_state = SGDState(
+            x=x, step=state.step + 1, opt=getattr(state, "opt", ())
+        )
         return new_state, _metrics(
             (jnp.mean(losses) * t_o + jnp.mean(loss_c)) / (t_o + 1), g_c, x
         )
 
-    return round_fn
+    def rule_round_fn(state: SGDState, local_batches, comm_batch):
+        lopt, sopt = state.opt["local"], state.opt["server"]
+
+        def step(carry, batch_t):
+            x, opt = carry
+            loss, g = stacked_vg(x, batch_t)
+            upd, opt = local_opt.update(g, opt, x)
+            x = apply_updates(x, upd)
+            return (x, opt), (loss, g)
+
+        (x, lopt), (losses, gs) = jax.lax.scan(
+            step, (state.x, lopt), local_batches
+        )
+        loss_c, g_c = stacked_vg(x, comm_batch)
+        upd, lopt = local_opt.update(g_c, lopt, x)
+        x = apply_updates(x, upd)
+        if global_round and server_opt is not None:
+            x, sopt = server_step(server_opt, sopt, mix(state.x), mix(x))
+        else:
+            x = mix(x)
+        lopt = comm_opt_state(
+            lopt, mix, _n_agents(state.x), opt_policy, is_global=global_round
+        )
+        new_state = SGDState(
+            x=x, step=state.step + 1, opt={"local": lopt, "server": sopt}
+        )
+        return new_state, _metrics(
+            (jnp.mean(losses) * t_o + jnp.mean(loss_c)) / (t_o + 1), g_c, x
+        )
+
+    return rule_round_fn if has_rules else legacy_round_fn
+
+
+def _n_agents(x: PyTree) -> int:
+    return jax.tree.leaves(x)[0].shape[0]
 
 
 # ---------------------------------------------------------------------------
@@ -106,29 +175,74 @@ class GTState(NamedTuple):
     y: PyTree
     g: PyTree
     step: jnp.ndarray
+    opt: PyTree = ()  # () legacy | {"local": ..., "server": ...} with rules
 
 
-def dsgt_init(loss_fn: LossFn, x0: PyTree, batch0: Any) -> GTState:
+def dsgt_init(
+    loss_fn: LossFn,
+    x0: PyTree,
+    batch0: Any,
+    local_opt: Optional[UpdateRule] = None,
+    server_opt: Optional[UpdateRule] = None,
+) -> GTState:
     s = pisco_init_state(loss_fn, x0, batch0)
-    return GTState(x=s.x, y=s.y, g=s.g, step=s.step)
+    return GTState(
+        x=s.x, y=s.y, g=s.g, step=s.step,
+        opt=init_opt_state(x0, local_opt, server_opt),
+    )
 
 
 def make_dsgt_round_fn(
-    loss_fn: LossFn, eta: float, mixing: MixingOps, *, global_round: bool = False
+    loss_fn: LossFn,
+    eta: float,
+    mixing: MixingOps,
+    *,
+    global_round: bool = False,
+    local_opt: Optional[UpdateRule] = None,
+    server_opt: Optional[UpdateRule] = None,
+    opt_policy: str = "mix",
 ) -> Callable:
-    """DSGT:  x+ = mix(x - eta y);  y+ = mix(y) + g(x+) - g(x)."""
+    """DSGT:  x+ = mix(x - eta y);  y+ = mix(y) + g(x+) - g(x).  With rules
+    bound, the tracker step goes through the local rule (the y/g recursion —
+    and hence Lemma 1 — is untouched)."""
     stacked_vg = make_stacked_value_and_grad(loss_fn)
     mix = mixing.global_avg if global_round else mixing.gossip
+    has_rules = local_opt is not None or server_opt is not None
+    if has_rules and local_opt is None:
+        local_opt = sgd_rule(eta)
 
-    def round_fn(state: GTState, local_batches, comm_batch):
+    def legacy_round_fn(state: GTState, local_batches, comm_batch):
         del local_batches  # DSGT has no local phase; comm_batch is Z^{k+1}
         x_new = mix(jax.tree.map(lambda xi, yi: xi - eta * yi, state.x, state.y))
         loss, g_new = stacked_vg(x_new, comm_batch)
         y_new = tree_add(mix(state.y), tree_sub(g_new, state.g))
-        new_state = GTState(x=x_new, y=y_new, g=g_new, step=state.step + 1)
+        new_state = GTState(
+            x=x_new, y=y_new, g=g_new, step=state.step + 1,
+            opt=getattr(state, "opt", ()),
+        )
         return new_state, _metrics(loss, g_new, x_new)
 
-    return round_fn
+    def rule_round_fn(state: GTState, local_batches, comm_batch):
+        del local_batches
+        lopt, sopt = state.opt["local"], state.opt["server"]
+        upd, lopt = local_opt.update(state.y, lopt, state.x)
+        cand = apply_updates(state.x, upd)
+        if global_round and server_opt is not None:
+            x_new, sopt = server_step(server_opt, sopt, mix(state.x), mix(cand))
+        else:
+            x_new = mix(cand)
+        loss, g_new = stacked_vg(x_new, comm_batch)
+        y_new = tree_add(mix(state.y), tree_sub(g_new, state.g))
+        lopt = comm_opt_state(
+            lopt, mix, _n_agents(state.x), opt_policy, is_global=global_round
+        )
+        new_state = GTState(
+            x=x_new, y=y_new, g=g_new, step=state.step + 1,
+            opt={"local": lopt, "server": sopt},
+        )
+        return new_state, _metrics(loss, g_new, x_new)
+
+    return rule_round_fn if has_rules else legacy_round_fn
 
 
 # ---------------------------------------------------------------------------
@@ -137,12 +251,21 @@ def make_dsgt_round_fn(
 
 
 def make_periodical_gt_round_fn(
-    loss_fn: LossFn, cfg: PiscoConfig, mixing: MixingOps
+    loss_fn: LossFn,
+    cfg: PiscoConfig,
+    mixing: MixingOps,
+    *,
+    local_opt: Optional[UpdateRule] = None,
+    server_opt: Optional[UpdateRule] = None,
+    opt_policy: str = "mix",
 ) -> Callable:
     """[LLKS24]: gradient tracking with T_o local steps, gossip every round —
     exactly PISCO's gossip round (Remark 1).  GTState carries no error-feedback
     residuals, so compressed mixing runs through the stateless path."""
-    return make_round_fn(loss_fn, cfg, mixing, global_round=False, use_ef=False)
+    return make_round_fn(
+        loss_fn, cfg, mixing, global_round=False, use_ef=False,
+        local_opt=local_opt, server_opt=server_opt, opt_policy=opt_policy,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -155,29 +278,73 @@ class ScaffoldState(NamedTuple):
     c_i: PyTree  # agent control variates (stacked)
     c: PyTree  # server control variate (stacked-broadcast for layout parity)
     step: jnp.ndarray
+    opt: PyTree = ()  # () legacy | {"local": ..., "server": ...} with rules
 
 
-def scaffold_init(loss_fn: LossFn, x0: PyTree, batch0: Any) -> ScaffoldState:
+def scaffold_init(
+    loss_fn: LossFn,
+    x0: PyTree,
+    batch0: Any,
+    local_opt: Optional[UpdateRule] = None,
+    server_opt: Optional[UpdateRule] = None,
+) -> ScaffoldState:
     _, g0 = make_stacked_value_and_grad(loss_fn)(x0, batch0)
     c = jax.tree.map(
         lambda v: jnp.broadcast_to(jnp.mean(v, axis=0, keepdims=True), v.shape), g0
     )
-    return ScaffoldState(x=x0, c_i=g0, c=c, step=jnp.zeros((), jnp.int32))
+    return ScaffoldState(
+        x=x0, c_i=g0, c=c, step=jnp.zeros((), jnp.int32),
+        opt=init_opt_state(x0, local_opt, server_opt),
+    )
 
 
 def make_scaffold_round_fn(
-    loss_fn: LossFn, eta_l: float, eta_g: float, t_o: int, mixing: MixingOps
+    loss_fn: LossFn,
+    eta_l: float,
+    eta_g: float,
+    t_o: int,
+    mixing: MixingOps,
+    *,
+    local_opt: Optional[UpdateRule] = None,
+    server_opt: Optional[UpdateRule] = None,
+    opt_policy: str = "reset",
 ) -> Callable:
     """SCAFFOLD round (always agent-to-server; the federated anchor of Table 2).
 
     Local:  x <- x - eta_l (g_i(x) - c_i + c), T_o+1 steps.
     Then:   c_i+ = c_i - c + (x_k - x_To) / ((T_o+1) eta_l)
             x+   = x_k + eta_g * mean(x_To - x_k);  c+ = mean(c_i+)
+
+    With rules bound, the local rule descends along the corrected gradient
+    ``g_i + (c - c_i)``; the variate update keeps the option-II difference
+    form above (its 1/((T_o+1) eta_l) scale is SCAFFOLD's own estimator and
+    stays fixed), and a server rule replaces the eta_g step with a FedOpt
+    update on the round pseudo-gradient.
     """
     stacked_vg = make_stacked_value_and_grad(loss_fn)
     g_avg = mixing.global_avg
+    has_rules = local_opt is not None or server_opt is not None
+    if has_rules and local_opt is None:
+        local_opt = sgd_rule(eta_l)
 
-    def round_fn(state: ScaffoldState, local_batches, comm_batch):
+    def _variates_and_server(state, x_to, lopt, sopt):
+        steps = (t_o + 1) * eta_l
+        c_i_new = jax.tree.map(
+            lambda ci, c, xk, xt: ci - c + (xk - xt) / steps,
+            state.c_i,
+            state.c,
+            state.x,
+            x_to,
+        )
+        if sopt is not None and server_opt is not None:
+            x_new, sopt = server_step(server_opt, sopt, state.x, g_avg(x_to))
+        else:
+            delta = g_avg(tree_sub(x_to, state.x))
+            x_new = jax.tree.map(lambda xk, d: xk + eta_g * d, state.x, delta)
+        c_new = g_avg(c_i_new)
+        return c_i_new, c_new, x_new, sopt
+
+    def legacy_round_fn(state: ScaffoldState, local_batches, comm_batch):
         correction = tree_sub(state.c, state.c_i)
 
         def step(carry, batch_t):
@@ -194,25 +361,48 @@ def make_scaffold_round_fn(
             lambda xi, gi, ci: xi - eta_l * (gi + ci), x_to, g_c, correction
         )
 
-        steps = (t_o + 1) * eta_l
-        c_i_new = jax.tree.map(
-            lambda ci, c, xk, xt: ci - c + (xk - xt) / steps,
-            state.c_i,
-            state.c,
-            state.x,
-            x_to,
-        )
-        delta = g_avg(tree_sub(x_to, state.x))
-        x_new = jax.tree.map(lambda xk, d: xk + eta_g * d, state.x, delta)
-        c_new = g_avg(c_i_new)
+        c_i_new, c_new, x_new, _ = _variates_and_server(state, x_to, None, None)
         new_state = ScaffoldState(
-            x=x_new, c_i=c_i_new, c=c_new, step=state.step + 1
+            x=x_new, c_i=c_i_new, c=c_new, step=state.step + 1,
+            opt=getattr(state, "opt", ()),
         )
         return new_state, _metrics(
             (jnp.mean(losses) * t_o + jnp.mean(loss_c)) / (t_o + 1), g_c, x_new
         )
 
-    return round_fn
+    def rule_round_fn(state: ScaffoldState, local_batches, comm_batch):
+        lopt, sopt = state.opt["local"], state.opt["server"]
+        correction = tree_sub(state.c, state.c_i)
+
+        def step(carry, batch_t):
+            x, opt = carry
+            loss, g = stacked_vg(x, batch_t)
+            upd, opt = local_opt.update(tree_add(g, correction), opt, x)
+            x = apply_updates(x, upd)
+            return (x, opt), (loss, g)
+
+        (x_to, lopt), (losses, _) = jax.lax.scan(
+            step, (state.x, lopt), local_batches
+        )
+        loss_c, g_c = stacked_vg(x_to, comm_batch)
+        upd, lopt = local_opt.update(tree_add(g_c, correction), lopt, x_to)
+        x_to = apply_updates(x_to, upd)
+
+        c_i_new, c_new, x_new, sopt = _variates_and_server(
+            state, x_to, lopt, sopt
+        )
+        lopt = comm_opt_state(
+            lopt, g_avg, _n_agents(state.x), opt_policy, is_global=True
+        )
+        new_state = ScaffoldState(
+            x=x_new, c_i=c_i_new, c=c_new, step=state.step + 1,
+            opt={"local": lopt, "server": sopt},
+        )
+        return new_state, _metrics(
+            (jnp.mean(losses) * t_o + jnp.mean(loss_c)) / (t_o + 1), g_c, x_new
+        )
+
+    return rule_round_fn if has_rules else legacy_round_fn
 
 
 # ---------------------------------------------------------------------------

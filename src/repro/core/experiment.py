@@ -53,6 +53,12 @@ from repro.core.mixing import MixingOps, make_network_mixing
 from repro.core.pisco import LossFn, PiscoConfig, replicate_params
 from repro.core.topology import make_topology, parse_process_spec
 from repro.core.trainer import History
+from repro.optim.update_rules import (
+    OPT_POLICIES,
+    make_lr_schedule,
+    parse_update_rule,
+    resolve_update_rules,
+)
 
 PyTree = Any
 Sampler = Callable[[int], tuple]
@@ -78,6 +84,20 @@ class ExperimentSpec:
     participation: float = 1.0
     compression: Optional[str] = None  # None | "q8" | "q4" | "top0.1" | ...
     error_feedback: bool = True
+    # Pluggable update rules (DESIGN.md §10), as declarative strings:
+    # optimizer        — local rule ("sgd" | "momentum[:beta=..]" | "adam" |
+    #                    "clip:1.0|momentum" | ...); None => the registry
+    #                    entry's default, which for the built-ins is the
+    #                    bit-exact legacy hardcoded-SGD path.
+    # server_optimizer — FedOpt server rule at global-averaging rounds
+    #                    ("fedavgm" | "fedadam" | "sgd:lr=..." | ...).
+    # lr_schedule      — per-round local-LR decay over optim.schedules
+    #                    ("linear[:final=..]" | "cosine" | "warmup_cosine").
+    # opt_policy       — opt-state comm policy override ("mix"|"keep"|"reset").
+    optimizer: Optional[str] = None
+    server_optimizer: Optional[str] = None
+    lr_schedule: Optional[str] = None
+    opt_policy: Optional[str] = None
     rounds: int = 100
     eval_every: int = 1
     driver: str = "scan"  # "scan" (on-device blocks) | "loop" (legacy)
@@ -86,6 +106,17 @@ class ExperimentSpec:
     def __post_init__(self):
         if self.driver not in DRIVERS:
             raise ValueError(f"driver {self.driver!r} not in {DRIVERS}")
+        # fail fast on malformed optimizer specs (cheap parse, discarded)
+        if self.optimizer is not None:
+            parse_update_rule(self.optimizer)
+        if self.server_optimizer is not None:
+            parse_update_rule(self.server_optimizer)
+        if self.lr_schedule is not None:
+            make_lr_schedule(self.lr_schedule, 1.0, 1)
+        if self.opt_policy is not None and self.opt_policy not in OPT_POLICIES:
+            raise ValueError(
+                f"opt_policy {self.opt_policy!r} not in {OPT_POLICIES}"
+            )
         if not 0.0 < self.participation <= 1.0:
             raise ValueError(
                 f"participation must be in (0, 1], got {self.participation}"
@@ -219,8 +250,14 @@ class Experiment:
         return replicate_params(self._params0, self.spec.config.n_agents)
 
     def _bind(self, mixing: MixingOps) -> BoundAlgorithm:
-        return get_algorithm(self.spec.algo).bind(
-            self.loss_fn, self.spec.config, mixing
+        spec = self.spec
+        opt_kw = resolve_update_rules(
+            spec.optimizer, spec.server_optimizer, spec.lr_schedule,
+            spec.opt_policy,
+            eta_l=spec.config.eta_l, rounds=spec.rounds, t_o=spec.config.t_o,
+        )
+        return get_algorithm(spec.algo).bind(
+            self.loss_fn, spec.config, mixing, **opt_kw
         )
 
     def _fresh_history(self, mixing: MixingOps, bound: BoundAlgorithm) -> History:

@@ -137,14 +137,25 @@ def run_training(
     jit: bool = True,
     driver: str = "loop",
     block_size: int = 32,
+    local_opt=None,
+    server_opt=None,
+    opt_policy: Optional[str] = None,
 ) -> History:
     """Deprecated shim: drive ``rounds`` communication rounds of ``algo``.
 
     Equivalent to building an :class:`~repro.core.experiment.Experiment`;
     defaults to the legacy per-round host loop (``driver="loop"``) for exact
     backward compatibility — pass ``driver="scan"`` for the chunked on-device
-    driver."""
-    bound = get_algorithm(algo).bind(loss_fn, cfg, mixing)
+    driver.  ``local_opt`` / ``server_opt`` / ``opt_policy`` pass through to
+    ``Algorithm.bind`` (rules or their string forms; None = legacy SGD)."""
+    opt_kw = {}
+    if local_opt is not None:
+        opt_kw["local_opt"] = local_opt
+    if server_opt is not None:
+        opt_kw["server_opt"] = server_opt
+    if opt_policy is not None:
+        opt_kw["opt_policy"] = opt_policy
+    bound = get_algorithm(algo).bind(loss_fn, cfg, mixing, **opt_kw)
     _, comm0 = sampler(-1)
     state = bound.init(loss_fn, x0_stacked, comm0)
 

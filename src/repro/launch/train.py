@@ -35,6 +35,7 @@ from repro.core.mixing import make_network_mixing
 from repro.core.pisco import PiscoConfig, replicate_params
 from repro.core.schedule import CommAccountant
 from repro.core.topology import make_topology
+from repro.optim.update_rules import RULE_NAMES, resolve_update_rules
 from repro.data.synthetic import synthetic_lm_tokens
 from repro.models import get_bundle
 from repro.models.rope import mrope_text_positions
@@ -115,6 +116,21 @@ def main(argv=None) -> int:
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of agents sampled into each server round")
     ap.add_argument("--algo", default="pisco", choices=list(registered_algorithms()))
+    ap.add_argument("--local-opt", default=None,
+                    help="pluggable local update rule (DESIGN.md §10): "
+                         f"{'|'.join(RULE_NAMES)} with k=v args, e.g. "
+                         "'momentum:beta=0.9' or 'clip:1.0|adam' "
+                         "(default: the bit-exact hardcoded-SGD path)")
+    ap.add_argument("--server-opt", default=None,
+                    help="FedOpt server rule at global-averaging rounds: "
+                         "fedavgm | fedadam | sgd:lr=... | momentum | adam")
+    ap.add_argument("--lr-schedule", default=None,
+                    help="per-round local-LR decay: linear[:final=..] | "
+                         "cosine[:final=..] | warmup_cosine[:warmup=..]")
+    ap.add_argument("--opt-policy", default=None,
+                    choices=["mix", "keep", "reset"],
+                    help="what happens to agent-stacked optimizer buffers at "
+                         "communication rounds (default: registry entry's)")
     ap.add_argument("--driver", default="scan", choices=["scan", "loop"],
                     help="scan: chunked on-device lax.scan; loop: legacy host loop")
     ap.add_argument("--block-size", type=int, default=16,
@@ -146,17 +162,42 @@ def main(argv=None) -> int:
     x0 = replicate_params(params, args.n_agents)
 
     start_round = 0
+    ckpt_tree = None
     if args.ckpt_dir:
         latest = latest_checkpoint(args.ckpt_dir)
         if latest:
-            start_round, tree = restore_checkpoint(latest)
+            start_round, ckpt_tree = restore_checkpoint(latest)
             print(f"restored {latest} at round {start_round}")
 
-    bound = get_algorithm(args.algo).bind(bundle.loss, pcfg, mixing)
+    opt_kw = resolve_update_rules(
+        args.local_opt, args.server_opt, args.lr_schedule, args.opt_policy,
+        eta_l=args.eta_l, rounds=args.rounds, t_o=args.t_o,
+    )
+    if opt_kw:
+        lo, so = opt_kw.get("local_opt"), opt_kw.get("server_opt")
+        print(f"update rules: local={lo.name if lo else 'sgd (default)'} "
+              f"server={so.name if so else 'none'} "
+              f"policy={opt_kw.get('opt_policy', 'registry default')}")
+    bound = get_algorithm(args.algo).bind(bundle.loss, pcfg, mixing, **opt_kw)
     acct = CommAccountant()
 
     local0, comm0 = sampler(-1)
     state = bound.init(bundle.loss, x0, comm0)
+    if ckpt_tree is not None:
+        # the checkpoint stores namedtuples as plain tuples; pour its leaves
+        # back into the freshly-initialized state's structure (which also
+        # validates that the bound algorithm/optimizer matches the snapshot)
+        treedef = jax.tree.structure(state)
+        leaves = jax.tree.leaves(ckpt_tree)
+        if len(leaves) != treedef.num_leaves:
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves but the bound "
+                f"algorithm state needs {treedef.num_leaves} — was it saved "
+                f"with different --algo/--local-opt/--server-opt settings?"
+            )
+        state = jax.tree.unflatten(
+            treedef, [jnp.asarray(leaf) for leaf in leaves]
+        )
     t0 = time.perf_counter()
     net = bound.network
     if args.driver == "loop":

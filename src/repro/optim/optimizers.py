@@ -1,117 +1,35 @@
-"""Minimal optimizer library (no optax in this container).
+"""Back-compat optimizer names — now thin aliases over
+:mod:`repro.optim.update_rules` (no optax in this container).
 
-PISCO's local phase is plain tracked-SGD by construction (eq. 3a uses the
-tracker as the descent direction), but the framework also trains standard
-synchronous baselines and the end-to-end LM examples — those use these
-optimizers.  API mirrors optax: ``opt.init(params) -> state``,
-``opt.update(grads, state, params) -> (updates, state)``, then
-:func:`apply_updates`.
+Historically this module carried its own ``Optimizer`` dataclass and a
+duplicate of the LR-schedule plumbing; both now live in ``update_rules``:
+``Optimizer`` *is* :class:`~repro.optim.update_rules.UpdateRule` (one
+dataclass, one ``apply_updates``), and ``sgd`` / ``momentum`` / ``adam`` /
+``adamw`` are the combinator-built aliases the federated core binds as local
+and server rules.  Existing callers (`opt.init` / `opt.update` /
+`apply_updates`) work unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+from repro.optim.update_rules import (
+    UpdateRule,
+    adam,
+    adamw,
+    apply_updates,
+    momentum,
+    sgd,
+)
 
-import jax
-import jax.numpy as jnp
+# The unified dataclass: one optimizer API for the LM examples and the
+# federated round functions alike.
+Optimizer = UpdateRule
 
-PyTree = Any
-Schedule = Callable[[jnp.ndarray], jnp.ndarray]
-
-
-@dataclasses.dataclass(frozen=True)
-class Optimizer:
-    init: Callable[[PyTree], PyTree]
-    update: Callable[[PyTree, PyTree, Optional[PyTree]], Tuple[PyTree, PyTree]]
-
-
-def _lr_at(lr: Union[float, Schedule], count: jnp.ndarray) -> jnp.ndarray:
-    return lr(count) if callable(lr) else jnp.asarray(lr)
-
-
-def sgd(lr: Union[float, Schedule]) -> Optimizer:
-    def init(params):
-        return {"count": jnp.zeros((), jnp.int32)}
-
-    def update(grads, state, params=None):
-        step = _lr_at(lr, state["count"])
-        updates = jax.tree.map(lambda g: -step * g, grads)
-        return updates, {"count": state["count"] + 1}
-
-    return Optimizer(init, update)
-
-
-def momentum(lr: Union[float, Schedule], beta: float = 0.9, nesterov: bool = False) -> Optimizer:
-    def init(params):
-        return {
-            "count": jnp.zeros((), jnp.int32),
-            "mu": jax.tree.map(jnp.zeros_like, params),
-        }
-
-    def update(grads, state, params=None):
-        mu = jax.tree.map(lambda m, g: beta * m + g, state["mu"], grads)
-        if nesterov:
-            eff = jax.tree.map(lambda m, g: beta * m + g, mu, grads)
-        else:
-            eff = mu
-        step = _lr_at(lr, state["count"])
-        updates = jax.tree.map(lambda m: -step * m, eff)
-        return updates, {"count": state["count"] + 1, "mu": mu}
-
-    return Optimizer(init, update)
-
-
-def adam(
-    lr: Union[float, Schedule],
-    b1: float = 0.9,
-    b2: float = 0.999,
-    eps: float = 1e-8,
-) -> Optimizer:
-    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0)
-
-
-def adamw(
-    lr: Union[float, Schedule],
-    b1: float = 0.9,
-    b2: float = 0.999,
-    eps: float = 1e-8,
-    weight_decay: float = 0.01,
-) -> Optimizer:
-    def init(params):
-        return {
-            "count": jnp.zeros((), jnp.int32),
-            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
-            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
-        }
-
-    def update(grads, state, params=None):
-        count = state["count"] + 1
-        m = jax.tree.map(
-            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state["m"], grads
-        )
-        v = jax.tree.map(
-            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-            state["v"],
-            grads,
-        )
-        c1 = 1.0 - b1 ** count.astype(jnp.float32)
-        c2 = 1.0 - b2 ** count.astype(jnp.float32)
-        step = _lr_at(lr, count)
-
-        def upd(mm, vv, p):
-            u = -step * (mm / c1) / (jnp.sqrt(vv / c2) + eps)
-            if weight_decay and p is not None:
-                u = u - step * weight_decay * p.astype(jnp.float32)
-            return u
-
-        if params is None:
-            updates = jax.tree.map(lambda mm, vv: upd(mm, vv, None), m, v)
-        else:
-            updates = jax.tree.map(upd, m, v, params)
-        return updates, {"count": count, "m": m, "v": v}
-
-    return Optimizer(init, update)
-
-
-def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
-    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+__all__ = [
+    "Optimizer",
+    "UpdateRule",
+    "sgd",
+    "momentum",
+    "adam",
+    "adamw",
+    "apply_updates",
+]

@@ -1,0 +1,550 @@
+"""Composable update rules — the one optimizer API for the whole repo.
+
+An :class:`UpdateRule` is an optax-style gradient transformation::
+
+    state   = rule.init(params)
+    updates, state = rule.update(grads, state, params)
+    params  = apply_updates(params, updates)
+
+and is what both the federated core (PISCO's eq. 3a local step, the baseline
+descent steps, FedOpt-style server rounds) and the standalone LM examples run.
+``repro.optim.optimizers.Optimizer`` is the same dataclass (one API, shared
+``apply_updates``); the legacy names (``sgd`` / ``momentum`` / ``adam`` /
+``adamw``) are thin aliases over the combinators below.
+
+Three layers:
+
+* **Transformations** — ``trace`` (momentum), ``scale_by_adam``,
+  ``clip_by_global_norm``, ``add_decayed_weights``, ``scale``,
+  ``scale_by_learning_rate`` (the only place LR schedules plug in), composed
+  with ``chain``.
+* **Aliases** — ``sgd(lr)`` (implemented directly so its arithmetic is
+  bit-identical to the historical hardcoded ``x - eta * g`` step),
+  ``momentum``, ``nesterov``, ``adam``, ``adamw``, and the server-side
+  ``fedavgm`` / ``fedadam`` presets of the FedOpt family.
+* **Declarative layer** — :func:`parse_update_rule` turns the JSON/CLI string
+  form (``"momentum:beta=0.9"``, ``"clip:1.0|adam"``) into a rule, and
+  :func:`resolve_update_rules` builds the ``Algorithm.bind`` kwargs from
+  ``ExperimentSpec`` fields / ``launch.train`` flags, including per-round
+  local-LR decay through :mod:`repro.optim.schedules`.
+
+Agent-stacked usage: the federated core calls ``rule.init`` on the
+agent-stacked pytree (leading axis = n_agents on every leaf), so every
+params-shaped buffer (momentum trace, Adam moments) is per-agent state.  What
+happens to those buffers at communication rounds is a declarative per-
+algorithm policy (:func:`comm_opt_state`): ``"mix"`` moves them through the
+round's mixing operator (W or J) like the model, ``"keep"`` leaves them
+local, ``"reset"`` zeroes them whenever agents synchronize through the
+server.  Scalar state (the shared step count) is never mixed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import schedules as S
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateRule:
+    """``init/update`` gradient transformation (a.k.a. ``Optimizer``).
+
+    ``n_buffers`` counts the params-shaped state streams the rule carries
+    (momentum trace = 1, Adam moments = 2, plain SGD = 0) — the quantity the
+    byte model prices when the ``"mix"`` opt-state policy ships buffers over
+    the network alongside the model.
+    """
+
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], Tuple[PyTree, PyTree]]
+    name: str = "rule"
+    n_buffers: int = 0
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """Shared application step: ``params + updates`` (fp32 accumulate for
+    narrow param dtypes)."""
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates
+    )
+
+
+def _lr_at(lr: Union[float, Schedule], count: jnp.ndarray) -> jnp.ndarray:
+    """The single LR-schedule evaluation point (plain float or callable)."""
+    return lr(count) if callable(lr) else jnp.asarray(lr)
+
+
+# ---------------------------------------------------------------------------
+# Transformations
+# ---------------------------------------------------------------------------
+
+
+def chain(*rules: UpdateRule) -> UpdateRule:
+    """Compose transformations left-to-right; state is the tuple of states."""
+
+    def init(params):
+        return tuple(r.init(params) for r in rules)
+
+    def update(grads, state, params=None):
+        new_states = []
+        for r, s in zip(rules, state):
+            grads, s = r.update(grads, s, params)
+            new_states.append(s)
+        return grads, tuple(new_states)
+
+    return UpdateRule(
+        init,
+        update,
+        name="|".join(r.name for r in rules),
+        n_buffers=sum(r.n_buffers for r in rules),
+    )
+
+
+def scale(factor: float) -> UpdateRule:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: factor * g, grads), state
+
+    return UpdateRule(init, update, name=f"scale({factor})")
+
+
+def scale_by_learning_rate(lr: Union[float, Schedule]) -> UpdateRule:
+    """``-lr_t * g`` — the terminal descent scaling; owns the step count the
+    schedule is evaluated at."""
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    if callable(lr):
+        def update(grads, state, params=None):
+            step = _lr_at(lr, state["count"])
+            updates = jax.tree.map(lambda g: -step * g, grads)
+            return updates, {"count": state["count"] + 1}
+    else:
+        # python-scalar multiply: weak-typed (preserves the leaf dtype) and
+        # (-lr) * g is bit-identical to the hardcoded x - lr * g step
+        neg = -float(lr)
+
+        def update(grads, state, params=None):
+            updates = jax.tree.map(lambda g: neg * g, grads)
+            return updates, {"count": state["count"] + 1}
+
+    return UpdateRule(init, update, name="lr")
+
+
+def trace(decay: float, nesterov: bool = False) -> UpdateRule:
+    """Momentum accumulator: ``mu = decay * mu + g`` (heavy-ball / Nesterov)."""
+
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None):
+        mu = jax.tree.map(lambda m, g: decay * m + g, state["mu"], grads)
+        if nesterov:
+            out = jax.tree.map(lambda m, g: decay * m + g, mu, grads)
+        else:
+            out = mu
+        return out, {"mu": mu}
+
+    return UpdateRule(init, update, name=f"trace({decay})", n_buffers=1)
+
+
+def scale_by_adam(
+    b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+) -> UpdateRule:
+    """Adam direction: bias-corrected first/second moments (no LR)."""
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+        }
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        m = jax.tree.map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads,
+        )
+        v = jax.tree.map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads,
+        )
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        out = jax.tree.map(
+            lambda mm, vv: (mm / c1) / (jnp.sqrt(vv / c2) + eps), m, v
+        )
+        return out, {"count": count, "m": m, "v": v}
+
+    return UpdateRule(init, update, name="adam_dir", n_buffers=2)
+
+
+def clip_by_global_norm(max_norm: float) -> UpdateRule:
+    """Rescale the whole update pytree when its global L2 norm exceeds
+    ``max_norm`` (agent-stacked trees are clipped jointly — the norm is over
+    every leaf element, matching optax semantics on the stacked problem)."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        sq = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+        norm = jnp.sqrt(sq)
+        factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-16))
+        return jax.tree.map(lambda g: factor * g, grads), state
+
+    return UpdateRule(init, update, name=f"clip({max_norm})")
+
+
+def add_decayed_weights(weight_decay: float) -> UpdateRule:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        if not weight_decay or params is None:
+            return grads, state
+        return (
+            jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(jnp.float32), grads, params
+            ),
+            state,
+        )
+
+    return UpdateRule(init, update, name=f"wd({weight_decay})")
+
+
+def _named(rule: UpdateRule, name: str) -> UpdateRule:
+    return dataclasses.replace(rule, name=name)
+
+
+# ---------------------------------------------------------------------------
+# Aliases (local rules + FedOpt server presets)
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: Union[float, Schedule]) -> UpdateRule:
+    """Plain SGD.  This is the repo-wide default local rule and must stay
+    bit-identical to the historical hardcoded ``x - eta * g`` descent step
+    (pinned by tests/test_update_rules.py)."""
+    return _named(scale_by_learning_rate(lr), "sgd")
+
+
+def momentum(
+    lr: Union[float, Schedule], beta: float = 0.9, nesterov: bool = False
+) -> UpdateRule:
+    return _named(
+        chain(trace(beta, nesterov=nesterov), scale_by_learning_rate(lr)),
+        f"{'nesterov' if nesterov else 'momentum'}({beta})",
+    )
+
+
+def adam(
+    lr: Union[float, Schedule],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> UpdateRule:
+    return _named(
+        chain(scale_by_adam(b1, b2, eps), scale_by_learning_rate(lr)), "adam"
+    )
+
+
+def adamw(
+    lr: Union[float, Schedule],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> UpdateRule:
+    return _named(
+        chain(
+            scale_by_adam(b1, b2, eps),
+            add_decayed_weights(weight_decay),
+            scale_by_learning_rate(lr),
+        ),
+        "adamw",
+    )
+
+
+def fedavgm(lr: Union[float, Schedule] = 1.0, beta: float = 0.9) -> UpdateRule:
+    """FedAvgM server rule [Hsu et al.]: momentum over round pseudo-gradients."""
+    return _named(momentum(lr, beta=beta), f"fedavgm({beta})")
+
+
+def fedadam(
+    lr: Union[float, Schedule] = 0.1,
+    b1: float = 0.9,
+    b2: float = 0.99,
+    eps: float = 1e-3,
+) -> UpdateRule:
+    """FedAdam server rule [Reddi et al.]: server-side Adam with the FedOpt
+    defaults (large eps, short second-moment horizon)."""
+    return _named(adam(lr, b1=b1, b2=b2, eps=eps), "fedadam")
+
+
+# ---------------------------------------------------------------------------
+# Opt-state plumbing for the federated core
+# ---------------------------------------------------------------------------
+
+OPT_POLICIES = ("mix", "keep", "reset")
+
+
+def init_opt_state(
+    x0: PyTree,
+    local_opt: Optional[UpdateRule] = None,
+    server_opt: Optional[UpdateRule] = None,
+) -> PyTree:
+    """The ``opt`` slot algorithm states carry: ``()`` on the legacy path
+    (no rules bound — zero leaves, bit-identical state), else a dict with the
+    agent-stacked local-rule state and the (stacked-broadcast) server state."""
+    if local_opt is None and server_opt is None:
+        return ()
+    if local_opt is None:
+        # server rule alone: the round functions fall back to the default
+        # sgd local rule; take its state from sgd itself so the two can
+        # never drift apart structurally (the lr value is irrelevant here)
+        local_opt = sgd(0.0)
+    return {
+        "local": local_opt.init(x0),
+        "server": server_opt.init(x0) if server_opt is not None else (),
+    }
+
+
+def comm_opt_state(
+    opt_state: PyTree,
+    mix: Callable[[PyTree], PyTree],
+    n_agents: int,
+    policy: str,
+    *,
+    is_global: bool = False,
+) -> PyTree:
+    """Apply the declarative opt-state communication policy at a comm round.
+
+    ``"mix"``  — every agent-stacked buffer moves through the same mixing
+                 operator as the model (W on gossip rounds, J on server
+                 rounds); scalar state (step counts) is untouched.
+    ``"keep"`` — buffers stay local, always.
+    ``"reset"``— buffers are zeroed when agents synchronize through the
+                 server (server rounds only); step counts keep running.
+    """
+    if policy not in OPT_POLICIES:
+        raise ValueError(f"opt policy {policy!r} not in {OPT_POLICIES}")
+    if policy == "keep" or opt_state == ():
+        return opt_state
+
+    def stacked(v):
+        return hasattr(v, "ndim") and v.ndim >= 1 and v.shape[0] == n_agents
+
+    if policy == "reset":
+        if not is_global:
+            return opt_state
+        return jax.tree.map(
+            lambda v: jnp.zeros_like(v) if stacked(v) else v, opt_state
+        )
+    return jax.tree.map(lambda v: mix(v) if stacked(v) else v, opt_state)
+
+
+def server_step(
+    server_opt: UpdateRule,
+    server_state: PyTree,
+    avg_old: PyTree,
+    avg_new: PyTree,
+) -> Tuple[PyTree, PyTree]:
+    """One FedOpt server update at a global-averaging round.
+
+    The round's pseudo-gradient is ``avg_old - avg_new`` (both already pushed
+    through the server's averaging operator, so partial participation prices
+    in); the server rule descends from ``avg_old`` along it.  With
+    ``server_opt = sgd(1.0)`` this recovers plain averaging (up to fp
+    association), and ``sgd(eta_g)`` is the classic two-sided step size.
+    """
+    delta = jax.tree.map(lambda a, b: a - b, avg_old, avg_new)
+    upd, server_state = server_opt.update(delta, server_state, avg_old)
+    return apply_updates(avg_old, upd), server_state
+
+
+# ---------------------------------------------------------------------------
+# Declarative layer: strings -> rules (ExperimentSpec fields, CLI flags)
+# ---------------------------------------------------------------------------
+
+# name -> (constructor, default kwargs overriding the caller's fallback lr)
+_RULE_TABLE = {
+    "sgd": (sgd, {}),
+    "momentum": (momentum, {}),
+    "nesterov": (lambda lr, beta=0.9: momentum(lr, beta=beta, nesterov=True), {}),
+    "adam": (adam, {}),
+    "adamw": (adamw, {}),
+    "fedavgm": (fedavgm, {"lr": 1.0}),
+    "fedadam": (fedadam, {"lr": 0.1}),
+}
+# lr-free transformations allowed in non-final chain positions
+_TRANSFORM_TABLE = {
+    "clip": (clip_by_global_norm, "max_norm"),
+}
+
+RULE_NAMES = tuple(sorted(_RULE_TABLE)) + tuple(sorted(_TRANSFORM_TABLE))
+
+
+def _parse_args(argstr: str, positional: Optional[str] = None) -> dict:
+    """``"0.9"`` (one positional) or ``"beta=0.9,lr=0.1"`` -> kwargs dict."""
+    out = {}
+    for part in filter(None, (s.strip() for s in argstr.split(","))):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k.strip()] = float(v)
+        elif positional is not None and positional not in out:
+            out[positional] = float(part)
+        else:
+            raise ValueError(f"positional arg {part!r} needs a k=v form")
+    return out
+
+
+def parse_update_rule(
+    spec: str, *, lr: Union[float, Schedule] = 1.0, force_lr: bool = False
+) -> UpdateRule:
+    """Build an :class:`UpdateRule` from its declarative string form.
+
+    Grammar: ``part("|"part)*`` where each part is ``name[:args]``.  The
+    final part must be a named rule (``sgd`` / ``momentum`` / ``nesterov`` /
+    ``adam`` / ``adamw`` / ``fedavgm`` / ``fedadam``); earlier parts are
+    lr-free transforms (``clip:<max_norm>``).  ``lr`` is the caller's
+    fallback step size (``eta_l`` locally, 1.0 server-side), overridden by a
+    rule's own default (``fedadam`` -> 0.1) or an explicit ``lr=`` arg —
+    unless ``force_lr`` is set, which makes the caller's ``lr`` win (used
+    when an active lr_schedule, already built on the spec's base LR, must
+    not be shadowed by the string's ``lr=``)::
+
+        "sgd"                     # the bit-exact legacy default
+        "momentum:beta=0.9"
+        "adam:lr=0.01,b2=0.99"
+        "clip:1.0|momentum"       # global-norm clip, then momentum
+    """
+    parts = [p.strip() for p in spec.split("|") if p.strip()]
+    if not parts:
+        raise ValueError(f"empty update-rule spec {spec!r}")
+    rules = []
+    for i, part in enumerate(parts):
+        name, _, argstr = part.partition(":")
+        name = name.strip()
+        last = i == len(parts) - 1
+        if name in _TRANSFORM_TABLE:
+            if last:
+                raise ValueError(
+                    f"{name!r} is a transform and cannot terminate the chain "
+                    f"{spec!r}; end with one of {sorted(_RULE_TABLE)}"
+                )
+            ctor, positional = _TRANSFORM_TABLE[name]
+            rules.append(ctor(**_parse_args(argstr, positional)))
+        elif name in _RULE_TABLE:
+            if not last:
+                raise ValueError(
+                    f"rule {name!r} must be the final part of {spec!r}"
+                )
+            ctor, defaults = _RULE_TABLE[name]
+            kw = dict(defaults)
+            kw.update(_parse_args(argstr, "lr"))
+            if force_lr:
+                kw["lr"] = lr
+            else:
+                kw.setdefault("lr", lr)
+            rules.append(ctor(**kw))
+        else:
+            raise ValueError(
+                f"unknown update rule {name!r}; options: {RULE_NAMES}"
+            )
+    rule = rules[0] if len(rules) == 1 else chain(*rules)
+    return _named(rule, spec)
+
+
+def _explicit_lr(spec: str) -> Optional[float]:
+    """The ``lr`` the rule string itself pins (explicit ``lr=``/positional on
+    the final part, or a preset default like fedadam's 0.1), if any."""
+    last = spec.split("|")[-1].strip()
+    name, _, argstr = last.partition(":")
+    entry = _RULE_TABLE.get(name.strip())
+    args = dict(entry[1]) if entry else {}
+    try:
+        args.update(_parse_args(argstr, "lr"))
+    except ValueError:
+        return None  # parse_update_rule will raise the real error
+    return args.get("lr")
+
+
+# lr-schedule string forms, over repro.optim.schedules
+_SCHEDULE_NAMES = ("constant", "linear", "cosine", "warmup_cosine")
+
+
+def make_lr_schedule(
+    spec: Optional[str], base_lr: float, total_steps: int
+) -> Union[float, Schedule]:
+    """Per-round local-LR decay: ``spec`` is ``name[:k=v,...]`` over
+    :mod:`repro.optim.schedules`, evaluated at the rule's local-step count
+    (``rounds * (T_o + 1)`` total steps).  ``None``/``"constant"`` return the
+    plain float so the bit-exact scalar path stays in force."""
+    if spec is None:
+        return base_lr
+    name, _, argstr = spec.partition(":")
+    name = name.strip()
+    if name == "constant":
+        return base_lr
+    args = _parse_args(argstr, "final")
+    if name == "linear":
+        return S.linear_decay(base_lr, total_steps, final=args.get("final", 0.0))
+    if name == "cosine":
+        return S.cosine_decay(base_lr, total_steps, final=args.get("final", 0.0))
+    if name == "warmup_cosine":
+        warmup = int(args.get("warmup", 0.1) * total_steps)
+        return S.warmup_cosine(
+            base_lr, warmup, total_steps, final=args.get("final", 0.0)
+        )
+    raise ValueError(
+        f"unknown lr schedule {name!r}; options: {_SCHEDULE_NAMES}"
+    )
+
+
+def resolve_update_rules(
+    optimizer: Optional[str] = None,
+    server_optimizer: Optional[str] = None,
+    lr_schedule: Optional[str] = None,
+    opt_policy: Optional[str] = None,
+    *,
+    eta_l: float,
+    rounds: int,
+    t_o: int,
+) -> dict:
+    """``Algorithm.bind`` kwargs from the declarative optimizer fields — the
+    one resolution point shared by ``ExperimentSpec`` and the launch CLI.
+    Returns ``{}`` when everything is unset (the legacy hardcoded-SGD path)."""
+    kw = {}
+    if optimizer is not None or lr_schedule is not None:
+        # an explicit lr= in the rule string is the schedule's base LR, and
+        # the schedule (not the constant) drives the steps
+        base = eta_l
+        if optimizer is not None:
+            explicit = _explicit_lr(optimizer)
+            if explicit is not None:
+                base = explicit
+        lr = make_lr_schedule(lr_schedule, base, rounds * (t_o + 1))
+        kw["local_opt"] = parse_update_rule(
+            optimizer or "sgd", lr=lr, force_lr=lr_schedule is not None
+        )
+    if server_optimizer is not None:
+        kw["server_opt"] = parse_update_rule(server_optimizer, lr=1.0)
+    if opt_policy is not None:
+        if opt_policy not in OPT_POLICIES:
+            raise ValueError(
+                f"opt policy {opt_policy!r} not in {OPT_POLICIES}"
+            )
+        kw["opt_policy"] = opt_policy
+    return kw

@@ -12,6 +12,25 @@ from repro.models.rope import mrope_text_positions
 
 B, S = 2, 32
 
+# Heavyweight reduced configs (profiled at 9-18 s per train/decode case on
+# the CI container): slow-marked so the fast tier-1 lane stays under its
+# 5-minute budget.  qwen3-8b (GQA attention) and mamba2-370m (SSM) remain in
+# the fast lane as the per-family smoke representatives; the full
+# tier1-hypothesis lane still runs every architecture.
+HEAVY_ARCHS = {
+    "seamless-m4t-medium", "deepseek-v2-lite-16b", "nemotron-4-340b",
+    "jamba-v0.1-52b", "qwen2-vl-2b", "qwen2.5-14b", "mixtral-8x7b",
+    "granite-20b",
+}
+
+
+def _arch_params(archs):
+    return [
+        pytest.param(a, marks=pytest.mark.slow) if a in HEAVY_ARCHS
+        else pytest.param(a)
+        for a in archs
+    ]
+
 
 def _batch_for(cfg, key, b=B, s=S):
     tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
@@ -25,7 +44,16 @@ def _batch_for(cfg, key, b=B, s=S):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize(
+    "arch",
+    [
+        # mamba2's train step is the one non-heavy case that still costs
+        # ~20 s (SSD scan compile); its decode/forward cases stay fast-lane
+        pytest.param(a, marks=pytest.mark.slow)
+        if (a in HEAVY_ARCHS or a == "mamba2-370m") else pytest.param(a)
+        for a in ARCH_IDS
+    ],
+)
 def test_train_step_smoke(arch, key):
     cfg = get_reduced(arch)
     assert cfg.n_layers <= 2 and cfg.d_model <= 512
@@ -44,7 +72,7 @@ def test_train_step_smoke(arch, key):
     assert np.isfinite(float(loss2))
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _arch_params(ARCH_IDS))
 def test_forward_shapes(arch, key):
     cfg = get_reduced(arch)
     bundle = get_bundle(cfg)
@@ -72,10 +100,10 @@ def test_forward_shapes(arch, key):
 
 @pytest.mark.parametrize(
     "arch",
-    [
+    _arch_params([
         "qwen3-8b", "qwen2.5-14b", "granite-20b", "nemotron-4-340b",
         "mixtral-8x7b", "deepseek-v2-lite-16b", "mamba2-370m", "jamba-v0.1-52b",
-    ],
+    ]),
 )
 def test_decode_matches_full_forward(arch, key):
     from repro.models.transformer import lm_forward
@@ -99,6 +127,7 @@ def test_decode_matches_full_forward(arch, key):
         )
 
 
+@pytest.mark.slow
 def test_encdec_decode_consistency(key):
     cfg = get_reduced("seamless-m4t-medium")
     bundle = get_bundle(cfg)

@@ -131,10 +131,11 @@ def test_checkpoint_pisco_state(tmp_path):
     )
     p = save_checkpoint(str(tmp_path), 5, state)
     step, tree = restore_checkpoint(p)
-    x, y, g, stp, ef = tree
+    x, y, g, stp, ef, opt = tree
     np.testing.assert_array_equal(x["w"], np.ones((4, 3)))
     assert int(stp) == 5
     assert ef == ()  # compression off => empty error-feedback slot
+    assert opt == ()  # no update rules bound => empty optimizer slot
 
 
 # ---------------------------------------------------------------------------

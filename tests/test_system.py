@@ -77,15 +77,26 @@ def test_small_p_approaches_full_server_performance():
 
 @pytest.mark.slow
 def test_checkpoint_resume_in_train_launcher(tmp_path):
+    args = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "mamba2-370m", "--reduced",
+        "--n-agents", "2", "--t-o", "1", "--batch", "2", "--seq", "32",
+        "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+    ]
     proc = subprocess.run(
-        [
-            sys.executable, "-m", "repro.launch.train",
-            "--arch", "mamba2-370m", "--reduced", "--rounds", "3",
-            "--n-agents", "2", "--t-o", "1", "--batch", "2", "--seq", "32",
-            "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
-        ],
+        args + ["--rounds", "3"],
         env=_env(), capture_output=True, text=True, timeout=900,
     )
     assert proc.returncode == 0, proc.stderr[-2000:]
     files = os.listdir(tmp_path)
     assert any(f.startswith("ckpt_") for f in files)
+    # resume: the second invocation restores the snapshot state and only
+    # runs the remaining rounds
+    proc = subprocess.run(
+        args + ["--rounds", "4", "--log-every", "1"],
+        env=_env(), capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "restored" in proc.stdout
+    assert "round    3" in proc.stdout
+    assert "round    0" not in proc.stdout  # starts at the restored round

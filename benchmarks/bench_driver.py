@@ -19,7 +19,6 @@ changes), so ``per_round_s`` isolates the driver's own per-round cost:
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 
@@ -28,7 +27,7 @@ from repro.core import ExperimentSpec, get_algorithm, replicate_params
 from repro.core.driver import drive_loop, drive_scan, make_block_fn, stack_rounds
 from repro.core.compression import make_byte_model
 from repro.core.schedule import make_schedule
-from repro.core.trainer import History
+from repro.core.trainer import History, record_wall_time
 from repro.data import RoundSampler
 
 
@@ -95,12 +94,11 @@ def _drive_reps(driver: str, *, rounds: int, eval_every: int, quick: bool):
                 server_payloads=b.comm.server_payloads,
             )
         )
-        t0 = time.perf_counter()
-        state = drive(
-            b, state, sampler, rounds, hist,
-            eval_fn=eval_fn, eval_every=eval_every, **extra, **compiled,
-        )
-        hist.wall_time_s = time.perf_counter() - t0
+        with record_wall_time(hist):
+            state = drive(
+                b, state, sampler, rounds, hist,
+                eval_fn=eval_fn, eval_every=eval_every, **extra, **compiled,
+            )
         hist.final_state = state
         out.append(hist)
     return out

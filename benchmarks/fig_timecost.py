@@ -1,0 +1,184 @@
+"""Simulated time-to-target across systems profiles: which p/τ is fastest?
+
+The paper ranks configurations by communication *rounds* (Fig. 4) and PR 1
+added *bytes*; this benchmark adds the axis that actually decides deployments
+— simulated **wall-clock** under a systems-cost profile (DESIGN.md §11).  It
+runs the p × τ autotuner once on the §5.1 logreg workload, then re-prices the
+same trajectories under every profile (pure ``(seed, k)`` draws make repricing
+free), and compares PISCO's frontier against FedAvg and DSGT.
+
+Claims exercised:
+
+* under the free-network profile (zero latency, infinite bandwidth) the
+  ranking over ``p`` collapses to the rounds/bytes ranking of
+  ``fig4_p_sweep`` — time adds nothing when the network is free;
+* under ``wan-gossip`` (expensive peer links) the fastest configuration
+  moves to a *higher* ``p`` than under ``lan-gossip`` (cheap peers, far
+  server) — the paper's trade-off, now with a time axis.
+
+Emits ``BENCH_timecost.json`` under ``artifacts/bench/``.
+
+    PYTHONPATH=src python -m benchmarks.fig_timecost [--quick]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_logreg_workload, save_result
+from repro.core import ExperimentSpec
+from repro.data import RoundSampler
+from repro.sim import FREE_NETWORK, retime, tune
+
+P_GRID = [0.0, 0.03, 0.1, 0.3, 1.0]
+TAU_GRID = (1, 4)
+PROFILES_SWEPT = (
+    ("free", FREE_NETWORK),
+    ("lan-gossip", "lan-gossip"),
+    ("wan-gossip", "wan-gossip"),
+    ("lognormal-stragglers", "lognormal-stragglers"),
+    ("edge-vs-datacenter", "edge-vs-datacenter"),
+)
+
+
+def _curve(point, window: int, systems: str, max_points: int = 60) -> dict:
+    """Downsampled (cumulative sim seconds, smoothed loss) trajectory, priced
+    under ``systems`` — NOT the history's online ledger, which belongs to the
+    profile the sweep originally ran under."""
+    from repro.sim import price_history
+    from repro.sim.tuner import _smoothed
+
+    secs = np.cumsum(price_history(point.history, point.spec, systems=systems))
+    loss = _smoothed(point.history.loss, window)
+    idx = np.unique(
+        np.linspace(0, len(secs) - 1, min(max_points, len(secs))).astype(int)
+    )
+    return {
+        "sim_time_s": secs[idx].round(4).tolist(),
+        "loss": loss[idx].round(6).tolist(),
+    }
+
+
+def _bytes_ranking(result) -> list:
+    """(p, t_o) ranked by bytes-to-target — the fig4-style readout on the
+    identical trajectories (unreached configs last, by loss)."""
+    pts = sorted(
+        result.points,
+        key=lambda pt: (
+            0 if pt.bytes_to_target is not None else 1,
+            pt.bytes_to_target if pt.bytes_to_target is not None else 0,
+            pt.final_loss,
+        ),
+    )
+    return [[pt.p, pt.t_o] for pt in pts]
+
+
+def run(quick: bool = False, seed: int = 0) -> dict:
+    rounds = 150 if quick else 600
+    p_grid = [0.0, 0.1, 1.0] if quick else P_GRID
+    tau_grid = (1,) if quick else TAU_GRID
+    profiles = PROFILES_SWEPT[:3] if quick else PROFILES_SWEPT
+
+    data, loss_fn, _eval_fn, params0 = make_logreg_workload(quick=quick, seed=seed)
+    b = min(256, data.samples_per_agent)
+    pieces = dict(
+        loss_fn=loss_fn,
+        params0=params0,
+        sampler_factory=lambda s: RoundSampler(
+            data, batch_size=b, t_o=s.config.t_o, seed=s.config.seed
+        ),
+    )
+
+    def base_spec(algo: str, p: float = 0.1, t_o: int = 1) -> ExperimentSpec:
+        return ExperimentSpec.create(
+            algo=algo, n_agents=data.n_agents, t_o=t_o, eta_l=0.5, p=p,
+            seed=seed, rounds=rounds, eval_every=rounds, driver="scan",
+        )
+
+    # one training pass per (p, tau); every profile is a repricing
+    first = profiles[0][1]
+    pisco = tune(
+        base_spec("pisco"), pieces, p_grid=p_grid, tau_grid=tau_grid,
+        systems=first, strategy="grid",
+    )
+    target = pisco.target_loss
+    baselines = {
+        "fedavg": tune(
+            base_spec("fedavg"), pieces, p_grid=[1.0], systems=first,
+            target_loss=target,
+        ),
+        "dsgt": tune(
+            base_spec("dsgt", p=0.1), pieces, p_grid=[0.1], systems=first,
+            target_loss=target,
+        ),
+    }
+
+    per_profile = {}
+    for label, prof in profiles:
+        tuned = pisco if prof == first else retime(pisco, prof)
+        curves = {
+            f"pisco:p={tuned.best.p:g},tau={tuned.best.t_o}": _curve(
+                tuned.best, tuned.window, prof
+            )
+        }
+        bl = {}
+        for name, res in baselines.items():
+            r = res if prof == first else retime(res, prof)
+            bl[name] = r.points[0].to_dict()
+            curves[name] = _curve(r.points[0], tuned.window, prof)
+        per_profile[label] = {
+            "tuner": tuned.to_dict(),
+            "best_p": tuned.best.p,
+            "best_tau": tuned.best.t_o,
+            "baselines": bl,
+            "curves": curves,
+        }
+
+    consistency = {
+        "free_time_ranking": [[p, t] for p, t in pisco.ranking()],
+        "free_bytes_ranking": _bytes_ranking(pisco),
+    }
+    payload = {
+        "bench": "fig_timecost",
+        "quick": quick,
+        "target_loss": target,
+        "profiles": per_profile,
+        "consistency": consistency,
+    }
+    save_result("BENCH_timecost", payload)
+    return payload
+
+
+def tuner_flip(results: dict):
+    """Best-p under wan-gossip vs lan-gossip — the trade-off readout."""
+    lan = results.get("lan-gossip")
+    wan = results.get("wan-gossip")
+    if not lan or not wan:
+        return None
+    return lan["best_p"], wan["best_p"]
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    payload = run(quick=args.quick)
+    print(f"target smoothed loss: {payload['target_loss']:.4f}")
+    print(f"{'profile':>22} | {'best p':>7} {'tau':>4} | "
+          f"{'sim s->target':>13} | baselines (fedavg / dsgt)")
+    for label, cell in payload["profiles"].items():
+        best = cell["tuner"]["best"]
+        tts = best["time_to_target_s"]
+        fa = cell["baselines"]["fedavg"]["time_to_target_s"]
+        dg = cell["baselines"]["dsgt"]["time_to_target_s"]
+        fmt = lambda v: f"{v:.2f}" if v is not None else "---"
+        print(f"{label:>22} | {best['p']:7.2f} {best['t_o']:4d} | "
+              f"{fmt(tts):>13} | {fmt(fa)} / {fmt(dg)}")
+    flip = tuner_flip(payload["profiles"])
+    if flip:
+        print(f"best p: lan-gossip={flip[0]:g} -> wan-gossip={flip[1]:g}")
+
+
+if __name__ == "__main__":
+    main()

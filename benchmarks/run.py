@@ -20,7 +20,7 @@ def _row(name: str, seconds: float, derived: str) -> None:
 # are opt-in (not part of the default sweep).
 KNOWN = (
     "fig4", "fig5", "fig6", "fig7", "table2", "roofline", "compression",
-    "dynamic", "optimizers", "ablation", "driver",
+    "dynamic", "optimizers", "timecost", "ablation", "driver",
 )
 
 
@@ -140,6 +140,17 @@ def main() -> None:
             time.perf_counter() - t0,
             f"best_adaptive_speedup={s:.2f}x" if s else "n/a",
         )
+
+    if only is None or "timecost" in only:
+        from benchmarks import fig_timecost
+
+        t0 = time.perf_counter()
+        payload = fig_timecost.run(quick=quick)
+        flip = fig_timecost.tuner_flip(payload["profiles"])
+        derived = (
+            f"best_p_lan={flip[0]:g};best_p_wan={flip[1]:g}" if flip else "n/a"
+        )
+        _row("fig_timecost", time.perf_counter() - t0, derived)
 
     if only is None or "table2" in only:
         from benchmarks import table2_complexity

@@ -19,6 +19,7 @@ from repro.core.topology import (
     RandomMatchingProcess,
     RoundRobinProcess,
     ParticipationProcess,
+    edge_list,
     make_topology,
     make_topology_process,
     parse_process_spec,
@@ -58,7 +59,12 @@ from repro.core.compression import (
     make_byte_model,
     message_bytes,
 )
-from repro.core.trainer import History, run_training, make_algorithm_round_fns
+from repro.core.trainer import (
+    History,
+    record_wall_time,
+    run_training,
+    make_algorithm_round_fns,
+)
 from repro.core.algorithms import (
     Algorithm,
     BoundAlgorithm,
@@ -96,6 +102,6 @@ __all__ = [
     "PeriodicSchedule", "CommAccountant", "RoundByteModel", "make_schedule",
     "Compressor", "IdentityCompressor", "StochasticQuantizer",
     "TopKCompressor", "CompressedGossip", "compress_mixing", "make_compressor",
-    "make_byte_model", "message_bytes", "History", "run_training",
-    "make_algorithm_round_fns",
+    "make_byte_model", "message_bytes", "History", "record_wall_time",
+    "run_training", "make_algorithm_round_fns", "edge_list",
 ]

@@ -166,11 +166,14 @@ def _eval_at_xbar(eval_fn: EvalFn, state, k: int) -> Dict[str, float]:
     return dict(eval_fn(x_bar), round=k)
 
 
-def record_flags(hist, flags: np.ndarray, realized=None) -> None:
-    """Record schedule flags + per-round bytes.  ``realized`` is an optional
+def record_flags(hist, flags: np.ndarray, realized=None, start: int = 0) -> None:
+    """Record schedule flags + per-round bytes (and simulated seconds when a
+    time model is attached).  ``realized`` is an optional
     ``(messages, participants)`` pair of per-round arrays for dynamic
     networks — bytes are then priced per realized edge/participant instead of
-    the static round constants."""
+    the static round constants.  ``start`` is the absolute index of the
+    block's first round — the time model's draws are pure in ``(seed, k)``."""
+    time_model = getattr(hist, "time_model", None)
     for i, f in enumerate(flags):
         f = bool(f)
         hist.is_global.append(f)
@@ -181,7 +184,10 @@ def record_flags(hist, flags: np.ndarray, realized=None) -> None:
             nbytes = hist.byte_model.realized_round_bytes(
                 f, int(messages[i]), int(participants[i])
             )
-        hist.accountant.record(f, nbytes)
+        seconds = (
+            time_model.round_time(start + i, f) if time_model is not None else None
+        )
+        hist.accountant.record(f, nbytes, seconds=seconds)
 
 
 def drive_scan(
@@ -230,7 +236,7 @@ def drive_scan(
         hist.consensus_err.extend(
             np.asarray(metrics.consensus_err, dtype=np.float64).tolist()
         )
-        record_flags(hist, flags, realized)
+        record_flags(hist, flags, realized, start=start)
         k_end = stop - 1
         if eval_fn is not None and (k_end % eval_every == 0 or k_end == rounds - 1):
             hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k_end))
@@ -257,6 +263,7 @@ def drive_loop(
     when ``bound.network`` is set they must be the matrix-threaded form from
     :func:`dynamic_round_fns`."""
     net = bound.network
+    time_model = getattr(hist, "time_model", None)
     if round_fns is not None:
         gossip_fn, global_fn = round_fns
     elif net is not None:
@@ -289,7 +296,10 @@ def drive_loop(
         hist.grad_sq_norm.append(float(metrics.grad_sq_norm))
         hist.consensus_err.append(float(metrics.consensus_err))
         hist.is_global.append(is_global)
-        hist.accountant.record(is_global, nbytes)
+        seconds = (
+            time_model.round_time(k, is_global) if time_model is not None else None
+        )
+        hist.accountant.record(is_global, nbytes, seconds=seconds)
         if eval_fn is not None and (k % eval_every == 0 or k == rounds - 1):
             hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k))
         if stop_when is not None and stop_when(hist):

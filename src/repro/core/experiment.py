@@ -28,7 +28,6 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import json
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -52,7 +51,7 @@ from repro.core.driver import (
 from repro.core.mixing import MixingOps, make_network_mixing
 from repro.core.pisco import LossFn, PiscoConfig, replicate_params
 from repro.core.topology import make_topology, parse_process_spec
-from repro.core.trainer import History
+from repro.core.trainer import History, record_wall_time
 from repro.optim.update_rules import (
     OPT_POLICIES,
     make_lr_schedule,
@@ -82,6 +81,14 @@ class ExperimentSpec:
     # Fraction of agents sampled into each server round (uniform m-of-n,
     # doubly stochastic sampled-to-sampled averaging); 1.0 => everyone.
     participation: float = 1.0
+    # Simulated systems-cost profile (repro.sim, DESIGN.md §11): a named
+    # heterogeneity scenario — "uniform" | "lognormal-stragglers" |
+    # "edge-vs-datacenter" | "wan-gossip" | "lan-gossip" — with optional
+    # k=v overrides ("uniform:latency=0,bw=inf,rtt=0").  When set, every
+    # executed round is priced in simulated seconds (History.sim_time_s)
+    # alongside bytes; None (the default, and what every legacy payload
+    # deserializes to) records no sim time — bit-identical behavior.
+    systems: Optional[str] = None
     compression: Optional[str] = None  # None | "q8" | "q4" | "top0.1" | ...
     error_feedback: bool = True
     # Pluggable update rules (DESIGN.md §10), as declarative strings:
@@ -123,6 +130,11 @@ class ExperimentSpec:
             )
         if self.network is not None:
             parse_process_spec(self.network)  # fail fast on bad specs
+        if self.systems is not None:
+            # local import: repro.sim imports the Experiment API
+            from repro.sim.profiles import parse_systems_spec
+
+            parse_systems_spec(self.systems)  # fail fast on bad profiles
         # normalize mapping-typed topology kwargs into sorted item tuples so
         # specs stay hashable and JSON round-trips are canonical
         if isinstance(self.topology_kwargs, dict):
@@ -261,7 +273,7 @@ class Experiment:
         )
 
     def _fresh_history(self, mixing: MixingOps, bound: BoundAlgorithm) -> History:
-        return History(
+        hist = History(
             byte_model=make_byte_model(
                 mixing,
                 self._x0_stacked(),
@@ -270,6 +282,14 @@ class Experiment:
                 server_payloads=bound.comm.server_payloads,
             )
         )
+        if self.spec.systems is not None:
+            # local import: repro.sim imports the Experiment API
+            from repro.sim.costmodel import make_time_model
+
+            hist.time_model = make_time_model(
+                self.spec, hist.byte_model, network=mixing.network
+            )
+        return hist
 
     # -- execution ----------------------------------------------------------
 
@@ -283,13 +303,12 @@ class Experiment:
         hist = self._fresh_history(mixing, bound)
         drive = drive_scan if spec.driver == "scan" else drive_loop
         kw = {"block_size": spec.block_size} if spec.driver == "scan" else {}
-        t0 = time.perf_counter()
-        state = drive(
-            bound, state, sampler, spec.rounds, hist,
-            eval_fn=self.eval_fn, eval_every=spec.eval_every,
-            stop_when=self.stop_when, **kw,
-        )
-        hist.wall_time_s = time.perf_counter() - t0
+        with record_wall_time(hist):
+            state = drive(
+                bound, state, sampler, spec.rounds, hist,
+                eval_fn=self.eval_fn, eval_every=spec.eval_every,
+                stop_when=self.stop_when, **kw,
+            )
         hist.final_state = state
         return hist
 
@@ -346,58 +365,56 @@ class Experiment:
         block_fn = make_block_fn(vbound)
 
         hists = [self._fresh_history(mixing, bound) for _ in seeds]
-        t0 = time.perf_counter()
         cuts = block_bounds(
             spec.rounds,
             eval_every=spec.eval_every if self.eval_fn is not None else 0,
             block_size=spec.block_size,
         )
         net = bound.network
-        for start, stop in cuts:
-            flags = predraw_schedule(bound.schedule, start, stop)
-            per_seed = [sample_block(s, start, stop) for s in samplers]
-            # (block, seeds, ...) — round axis scans, seed axis vmaps
-            local = jax.tree.map(
-                lambda *ls: jnp.stack(ls, axis=1), *[b[0] for b in per_seed]
-            )
-            comm = jax.tree.map(
-                lambda *ls: jnp.stack(ls, axis=1), *[b[1] for b in per_seed]
-            )
-            if net is None:
-                realized = None
-                state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
-            else:
-                # all seeds advance through the same realized network (like
-                # the shared schedule); the matrices broadcast across the
-                # vmapped seed axis as scan-body closure constants
-                wg, ws, messages, participants = net.draw_block(start, stop)
-                realized = (messages, participants)
-                state, metrics = block_fn(
-                    state, jnp.asarray(flags), jnp.asarray(wg),
-                    jnp.asarray(ws), local, comm,
+        with record_wall_time(*hists):
+            for start, stop in cuts:
+                flags = predraw_schedule(bound.schedule, start, stop)
+                per_seed = [sample_block(s, start, stop) for s in samplers]
+                # (block, seeds, ...) — round axis scans, seed axis vmaps
+                local = jax.tree.map(
+                    lambda *ls: jnp.stack(ls, axis=1), *[b[0] for b in per_seed]
                 )
-            loss = np.asarray(metrics.loss, dtype=np.float64)  # (block, seeds)
-            gsq = np.asarray(metrics.grad_sq_norm, dtype=np.float64)
-            cerr = np.asarray(metrics.consensus_err, dtype=np.float64)
-            k_end = stop - 1
-            do_eval = self.eval_fn is not None and (
-                k_end % spec.eval_every == 0 or k_end == spec.rounds - 1
-            )
-            for i, hist in enumerate(hists):
-                hist.loss.extend(loss[:, i].tolist())
-                hist.grad_sq_norm.extend(gsq[:, i].tolist())
-                hist.consensus_err.extend(cerr[:, i].tolist())
-                record_flags(hist, flags, realized)
-                if do_eval:
-                    x_bar = jax.tree.map(
-                        lambda v: jnp.mean(v[i], axis=0), state.x
+                comm = jax.tree.map(
+                    lambda *ls: jnp.stack(ls, axis=1), *[b[1] for b in per_seed]
+                )
+                if net is None:
+                    realized = None
+                    state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
+                else:
+                    # all seeds advance through the same realized network (like
+                    # the shared schedule); the matrices broadcast across the
+                    # vmapped seed axis as scan-body closure constants
+                    wg, ws, messages, participants = net.draw_block(start, stop)
+                    realized = (messages, participants)
+                    state, metrics = block_fn(
+                        state, jnp.asarray(flags), jnp.asarray(wg),
+                        jnp.asarray(ws), local, comm,
                     )
-                    hist.eval_metrics.append(
-                        dict(self.eval_fn(x_bar), round=k_end)
-                    )
-        wall = time.perf_counter() - t0
+                loss = np.asarray(metrics.loss, dtype=np.float64)  # (block, seeds)
+                gsq = np.asarray(metrics.grad_sq_norm, dtype=np.float64)
+                cerr = np.asarray(metrics.consensus_err, dtype=np.float64)
+                k_end = stop - 1
+                do_eval = self.eval_fn is not None and (
+                    k_end % spec.eval_every == 0 or k_end == spec.rounds - 1
+                )
+                for i, hist in enumerate(hists):
+                    hist.loss.extend(loss[:, i].tolist())
+                    hist.grad_sq_norm.extend(gsq[:, i].tolist())
+                    hist.consensus_err.extend(cerr[:, i].tolist())
+                    record_flags(hist, flags, realized, start=start)
+                    if do_eval:
+                        x_bar = jax.tree.map(
+                            lambda v: jnp.mean(v[i], axis=0), state.x
+                        )
+                        hist.eval_metrics.append(
+                            dict(self.eval_fn(x_bar), round=k_end)
+                        )
         for i, hist in enumerate(hists):
-            hist.wall_time_s = wall
             hist.final_state = jax.tree.map(lambda v: v[i], state)
         return hists
 

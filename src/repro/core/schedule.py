@@ -12,19 +12,25 @@ prices (:class:`RoundByteModel`, built by
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+from typing import Iterator, Optional
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class CommAccountant:
-    """Counts communication rounds — and bytes — by kind (paper Fig. 4).
+    """Counts communication rounds — bytes, and simulated seconds — by kind.
 
     ``per_round_bytes`` keeps the realized per-round charge in round order, so
     bytes-to-target-accuracy readouts stay exact under dynamic networks where
     rounds are no longer interchangeable (link failures / partial
     participation make every round's byte cost a random variable).
+
+    ``per_round_seconds`` is the same ledger on the *time* axis: when a
+    systems model is attached (``ExperimentSpec.systems``, DESIGN.md §11) the
+    drivers record each round's simulated wall-clock alongside its bytes.
+    Runs without a systems model leave the seconds ledger empty — the
+    pre-sim behavior, bit-identical.
     """
 
     agent_to_agent: int = 0
@@ -32,15 +38,26 @@ class CommAccountant:
     agent_to_agent_bytes: int = 0
     agent_to_server_bytes: int = 0
     per_round_bytes: list = dataclasses.field(default_factory=list)
+    agent_to_agent_seconds: float = 0.0
+    agent_to_server_seconds: float = 0.0
+    per_round_seconds: list = dataclasses.field(default_factory=list)
 
-    def record(self, is_global: bool, nbytes: int = 0) -> None:
+    def record(
+        self, is_global: bool, nbytes: int = 0, seconds: Optional[float] = None
+    ) -> None:
         self.per_round_bytes.append(int(nbytes))
+        if seconds is not None:
+            self.per_round_seconds.append(float(seconds))
         if is_global:
             self.agent_to_server += 1
             self.agent_to_server_bytes += nbytes
+            if seconds is not None:
+                self.agent_to_server_seconds += seconds
         else:
             self.agent_to_agent += 1
             self.agent_to_agent_bytes += nbytes
+            if seconds is not None:
+                self.agent_to_agent_seconds += seconds
 
     @property
     def total(self) -> int:
@@ -49,6 +66,10 @@ class CommAccountant:
     @property
     def total_bytes(self) -> int:
         return self.agent_to_agent_bytes + self.agent_to_server_bytes
+
+    @property
+    def total_seconds(self) -> float:
+        return self.agent_to_agent_seconds + self.agent_to_server_seconds
 
 
 @dataclasses.dataclass(frozen=True)

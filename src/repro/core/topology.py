@@ -287,11 +287,15 @@ def _round_rng(seed: int, tag: int, k: int) -> np.random.Generator:
     return np.random.default_rng((int(seed), int(tag), int(k)))
 
 
-def _edge_list(adj: np.ndarray) -> np.ndarray:
+def edge_list(adj: np.ndarray) -> np.ndarray:
     """Undirected edges (i < j) of ``adj`` in deterministic row-major order,
-    as an (m, 2) int array."""
+    as an (m, 2) int array.  Public: the sim cost model gates gossip rounds
+    by the slowest realized edge and needs edge *identities*, not counts."""
     i, j = np.nonzero(np.triu(adj, k=1))
     return np.stack([i, j], axis=1) if i.size else np.zeros((0, 2), dtype=int)
+
+
+_edge_list = edge_list  # pre-sim internal name, kept for downstream callers
 
 
 def _adj_from_edges(n: int, edges: np.ndarray) -> np.ndarray:

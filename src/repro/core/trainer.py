@@ -15,6 +15,7 @@ construct an :class:`~repro.core.experiment.Experiment`.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
@@ -37,7 +38,16 @@ EvalFn = Callable[[PyTree], Dict[str, float]]
 
 @dataclasses.dataclass
 class History:
-    """Per-round records, numpy-backed for the benchmark harness."""
+    """Per-round records, numpy-backed for the benchmark harness.
+
+    Two distinct clocks, never to be confused (DESIGN.md §11):
+
+    * ``wall_time_s``  — *real* host seconds the run took, set exclusively by
+      :func:`record_wall_time` (the one timing authority);
+    * ``sim_time_s``   — *simulated* per-round seconds under the experiment's
+      systems model (``ExperimentSpec.systems``), recorded by the drivers
+      through the attached ``time_model``; empty when no model is attached.
+    """
 
     loss: List[float] = dataclasses.field(default_factory=list)
     grad_sq_norm: List[float] = dataclasses.field(default_factory=list)
@@ -50,6 +60,14 @@ class History:
     # Final algorithm state (agent-stacked pytree NamedTuple), set by the
     # drivers when the run completes.  Excluded from to_dict().
     final_state: Any = None
+    # RoundTimeModel (repro.sim.costmodel) when the spec carries a systems
+    # profile; holds live process objects, so excluded from to_dict().
+    time_model: Any = None
+
+    @property
+    def sim_time_s(self) -> List[float]:
+        """Simulated seconds per executed round (the accountant's ledger)."""
+        return self.accountant.per_round_seconds
 
     def running_mean_eval(self, key: str) -> np.ndarray:
         vals = np.array([m[key] for m in self.eval_metrics], dtype=np.float64)
@@ -103,7 +121,25 @@ class History:
                 else None
             ),
             "wall_time_s": float(self.wall_time_s),
+            "sim_time_s": [float(v) for v in self.sim_time_s],
+            "sim_time_total_s": float(self.accountant.total_seconds),
         }
+
+
+@contextlib.contextmanager
+def record_wall_time(*hists: "History"):
+    """The single *real* wall-clock authority: times the enclosed block with
+    ``time.perf_counter`` and writes the duration to every history's
+    ``wall_time_s`` on exit.  All drivers/entry points time through this one
+    helper so host wall time can never be confused with the simulated
+    ``sim_time_s`` series the systems model produces."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        dt = time.perf_counter() - t0
+        for h in hists:
+            h.wall_time_s = dt
 
 
 def make_algorithm_round_fns(
@@ -167,18 +203,18 @@ def run_training(
         mixes_per_round=bound.comm.mixes_per_round,
         server_payloads=bound.comm.server_payloads,
     )
-    t0 = time.perf_counter()
-    if driver == "scan":
-        state = drive_scan(
-            bound, state, sampler, rounds, hist,
-            eval_fn=eval_fn, eval_every=eval_every, stop_when=stop_when,
-            block_size=block_size,
-        )
-    else:
-        state = drive_loop(
-            bound, state, sampler, rounds, hist,
-            eval_fn=eval_fn, eval_every=eval_every, stop_when=stop_when, jit=jit,
-        )
-    hist.wall_time_s = time.perf_counter() - t0
+    with record_wall_time(hist):
+        if driver == "scan":
+            state = drive_scan(
+                bound, state, sampler, rounds, hist,
+                eval_fn=eval_fn, eval_every=eval_every, stop_when=stop_when,
+                block_size=block_size,
+            )
+        else:
+            state = drive_loop(
+                bound, state, sampler, rounds, hist,
+                eval_fn=eval_fn, eval_every=eval_every, stop_when=stop_when,
+                jit=jit,
+            )
     hist.final_state = state
     return hist

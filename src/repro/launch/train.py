@@ -25,12 +25,14 @@ import numpy as np
 from repro.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core.algorithms import get_algorithm, registered_algorithms
+from repro.core.compression import make_byte_model
 from repro.core.driver import (
     dynamic_round_fns,
     make_block_fn,
     predraw_schedule,
     sample_block,
 )
+from repro.core.experiment import ExperimentSpec
 from repro.core.mixing import make_network_mixing
 from repro.core.pisco import PiscoConfig, replicate_params
 from repro.core.schedule import CommAccountant
@@ -39,6 +41,7 @@ from repro.optim.update_rules import RULE_NAMES, resolve_update_rules
 from repro.data.synthetic import synthetic_lm_tokens
 from repro.models import get_bundle
 from repro.models.rope import mrope_text_positions
+from repro.sim import PROFILE_NAMES, make_time_model, tune
 
 
 def make_lm_sampler(cfg, n_agents: int, batch: int, seq: int, t_o: int, seed: int = 0):
@@ -115,6 +118,28 @@ def main(argv=None) -> int:
                          "matching | roundrobin[:n] (default: frozen base W)")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of agents sampled into each server round")
+    ap.add_argument("--systems", default=None,
+                    help="simulated systems-cost profile (DESIGN.md §11): "
+                         f"{'|'.join(PROFILE_NAMES)} with k=v overrides, e.g. "
+                         "'wan-gossip' or 'uniform:latency=0'; prints the "
+                         "simulated wall-clock split after training")
+    ap.add_argument("--tune", action="store_true",
+                    help="instead of training, run the p x tau communication "
+                         "autotuner under --systems (default profile: "
+                         "uniform) and print the simulated time-to-target "
+                         "frontier")
+    ap.add_argument("--tune-p", type=float, nargs="+",
+                    default=[0.0, 0.05, 0.1, 0.3, 1.0],
+                    help="server-probability grid for --tune")
+    ap.add_argument("--tune-tau", type=int, nargs="+", default=None,
+                    help="local-update (T_o) grid for --tune "
+                         "(default: just --t-o)")
+    ap.add_argument("--tune-rounds", type=int, default=None,
+                    help="round budget per tuner configuration "
+                         "(default: --rounds)")
+    ap.add_argument("--tune-strategy", default="halving",
+                    choices=["grid", "halving"],
+                    help="sweep every config fully, or successive-halving")
     ap.add_argument("--algo", default="pisco", choices=list(registered_algorithms()))
     ap.add_argument("--local-opt", default=None,
                     help="pluggable local update rule (DESIGN.md §10): "
@@ -161,6 +186,48 @@ def main(argv=None) -> int:
     params = bundle.init(key)
     x0 = replicate_params(params, args.n_agents)
 
+    # Declarative twin of this CLI invocation — what the sim cost model and
+    # the autotuner price (network/participation/systems draws are pure
+    # functions of this spec).
+    spec = ExperimentSpec.create(
+        algo=args.algo, n_agents=args.n_agents, t_o=args.t_o,
+        eta_l=args.eta_l, eta_c=args.eta_c, p=args.p, seed=args.seed,
+        topology=args.topology, network=args.network,
+        participation=args.participation,
+        systems=args.systems or ("uniform" if args.tune else None),
+        optimizer=args.local_opt, server_optimizer=args.server_opt,
+        lr_schedule=args.lr_schedule, opt_policy=args.opt_policy,
+        rounds=args.rounds, driver=args.driver, block_size=args.block_size,
+    )
+    if args.tune:
+        result = tune(
+            spec,
+            dict(
+                loss_fn=bundle.loss, params0=params,
+                sampler_factory=lambda s: make_lm_sampler(
+                    cfg, args.n_agents, args.batch, args.seq,
+                    s.config.t_o, args.seed,
+                ),
+            ),
+            p_grid=args.tune_p,
+            tau_grid=tuple(args.tune_tau) if args.tune_tau else (None,),
+            rounds=args.tune_rounds,
+            strategy=args.tune_strategy,
+        )
+        print(f"tuner ({result.strategy}) under {result.systems!r}: "
+              f"target smoothed loss {result.target_loss:.4f}")
+        print(f"{'p':>6} {'T_o':>4} {'rounds':>6} {'sim s->target':>13} "
+              f"{'total sim s':>11} {'final loss':>10}")
+        for pt in result.points:
+            tts = (
+                f"{pt.time_to_target_s:13.2f}"
+                if pt.time_to_target_s is not None else f"{'---':>13}"
+            )
+            print(f"{pt.p:6.2f} {pt.t_o:4d} {pt.rounds_run:6d} {tts} "
+                  f"{pt.total_sim_time_s:11.2f} {pt.final_loss:10.4f}")
+        print(f"fastest-to-target: p={result.best.p:g} T_o={result.best.t_o}")
+        return 0
+
     start_round = 0
     ckpt_tree = None
     if args.ckpt_dir:
@@ -180,6 +247,7 @@ def main(argv=None) -> int:
               f"policy={opt_kw.get('opt_policy', 'registry default')}")
     bound = get_algorithm(args.algo).bind(bundle.loss, pcfg, mixing, **opt_kw)
     acct = CommAccountant()
+    flag_hist: list = []  # executed schedule, for post-run sim pricing
 
     local0, comm0 = sampler(-1)
     state = bound.init(bundle.loss, x0, comm0)
@@ -213,6 +281,7 @@ def main(argv=None) -> int:
             local, comm = sampler(k)
             is_global = bool(bound.schedule(k))
             acct.record(is_global)
+            flag_hist.append(is_global)
             fn = global_fn if is_global else gossip_fn
             if net is not None:
                 w_gossip, w_server, _, _ = net.draw_round(k)
@@ -257,6 +326,7 @@ def main(argv=None) -> int:
                 state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
             for f in flags:
                 acct.record(bool(f))
+                flag_hist.append(bool(f))
             k_end = stop - 1
             if k_end % args.log_every == 0 or k_end == args.rounds - 1:
                 print(
@@ -273,6 +343,20 @@ def main(argv=None) -> int:
         f"done: {args.rounds} rounds in {dt:.1f}s "
         f"({acct.agent_to_agent} gossip, {acct.agent_to_server} server rounds)"
     )
+    if args.systems:
+        byte_model = make_byte_model(
+            mixing, x0, args.n_agents,
+            mixes_per_round=bound.comm.mixes_per_round,
+            server_payloads=bound.comm.server_payloads,
+        )
+        tm = make_time_model(spec, byte_model, network=bound.network)
+        secs = tm.price_rounds(flag_hist, start=start_round)
+        srv = np.asarray(flag_hist, dtype=bool)
+        print(
+            f"simulated time under {args.systems!r}: {secs.sum():.2f}s "
+            f"(gossip {secs[~srv].sum():.2f}s / {int((~srv).sum())} rounds, "
+            f"server {secs[srv].sum():.2f}s / {int(srv.sum())} rounds)"
+        )
     return 0
 
 

@@ -108,6 +108,40 @@ def test_realized_server_bytes_price_sampled_participants():
     assert hist.byte_model.server_round_bytes == 2 * per_round
 
 
+def test_joint_compression_dynamic_participation_bytes_hand_counted():
+    """The three pricing paths *composed* — q8 gossip compression x
+    roundrobin:2 link cycling x m-of-n participation — against fully
+    hand-counted per-round charges.
+
+    On a 4-ring (base edges (0,1),(0,3),(1,2),(2,3)), roundrobin:2 realizes
+    exactly 2 edges every round.  A q8 message for the d=16 problem is
+    16x8 + 32 scale bits = 20 bytes; a full-precision server message is
+    64 bytes.  PISCO mixes two streams (X and Y) and ships two payloads per
+    server direction, and participation=0.5 samples m=2 of 4 agents:
+
+      gossip round: 2 mixes x (2 edges x 2 dirs) x 20 B          = 160 B
+      server round: 2 payloads x 2 dirs x 2 participants x 64 B  = 512 B
+    """
+    n, rounds = 4, 6
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=n, t_o=1, eta_l=0.1, p=0.5, seed=3,
+        network="roundrobin:2", participation=0.5, compression="q8",
+        rounds=rounds, driver="scan", block_size=2,
+    )
+    hist = _experiment(spec, n=n).run()
+    assert hist.byte_model.gossip_message_bytes == 20
+    assert hist.byte_model.server_message_bytes == 64
+    expected = [512 if g else 160 for g in hist.is_global]
+    assert hist.accountant.per_round_bytes == expected
+    n_srv = sum(hist.is_global)
+    assert 0 < n_srv < rounds  # p=0.5/seed=3 realizes both round kinds
+    assert hist.accountant.agent_to_server_bytes == 512 * n_srv
+    assert hist.accountant.agent_to_agent_bytes == 160 * (rounds - n_srv)
+    # identical charges under the legacy loop driver (same pure draws)
+    h_loop = _experiment(spec.replace(driver="loop"), n=n).run()
+    assert h_loop.accountant.per_round_bytes == expected
+
+
 def test_static_process_bytes_and_losses_match_legacy_dense_path():
     """network='static' runs through the dynamic machinery but must realize
     the same matrices and the same per-round bytes as the legacy frozen-W

@@ -1,0 +1,384 @@
+"""Sim subsystem conformance: profiles, cost model, History wiring, tuner.
+
+Pins the DESIGN.md §11 contracts: profile realizations are pure in
+``(profile, n_agents, seed)``; round times come from hand-computable
+arithmetic; under the free-network profile simulated time reduces *exactly*
+to compute-only time; the simulated-seconds series is identical across the
+loop driver, the scan driver, and post-hoc repricing; and the p/τ tuner's
+ranking collapses to the rounds ranking when the network is free but flips
+toward higher ``p`` when gossip links cross the WAN.
+"""
+import json
+import pickle
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from conftest import make_logreg_problem
+from repro.core import Experiment, ExperimentSpec
+from repro.sim import (
+    FREE_NETWORK,
+    PROFILE_NAMES,
+    Profile,
+    SystemsModel,
+    SystemsParams,
+    make_profile,
+    parse_systems_spec,
+    price_history,
+    retime,
+    tune,
+)
+
+N_AGENTS = 5
+COMPUTE = 0.01  # the profiles' base seconds-per-local-step
+
+
+def _pieces(n=N_AGENTS):
+    loss_fn, _, sampler_factory, d = make_logreg_problem(n_agents=n)
+    return dict(
+        loss_fn=loss_fn,
+        params0={"w": jnp.zeros(d)},
+        sampler_factory=lambda s: sampler_factory(s.config.t_o),
+    )
+
+
+def _experiment(spec, n=N_AGENTS):
+    return Experiment(spec, **_pieces(n))
+
+
+# ---------------------------------------------------------------------------
+# Profiles: grammar, serialization, seed-deterministic realizations
+# ---------------------------------------------------------------------------
+
+
+def test_profile_spec_and_json_round_trips():
+    for name in PROFILE_NAMES:
+        p = make_profile(name)
+        assert make_profile(p.spec()) == p
+        assert Profile.from_json(p.to_json()) == p
+    p = make_profile("wan-gossip:latency=0.2,bw=1e6")
+    assert dict(p.overrides) == {"latency": 0.2, "bw": 1e6}
+    assert make_profile(p.spec()) == p
+    assert Profile.from_dict(p.to_dict()) == p
+
+
+def test_bad_profile_specs_fail_fast():
+    with pytest.raises(ValueError, match="unknown systems profile"):
+        parse_systems_spec("wan-gosip")
+    with pytest.raises(ValueError, match="bad systems override"):
+        parse_systems_spec("uniform:latency")
+    with pytest.raises(ValueError, match="bad systems override"):
+        parse_systems_spec("uniform:warp=9")
+    # value validation: garbage numbers would silently corrupt the ledger
+    with pytest.raises(ValueError, match="bandwidths must be positive"):
+        parse_systems_spec("uniform:bw=0")
+    with pytest.raises(ValueError, match="bandwidths must be positive"):
+        parse_systems_spec("uniform:up_bw=-1")
+    with pytest.raises(ValueError, match="finite and >= 0"):
+        parse_systems_spec("uniform:latency=-0.1")
+    with pytest.raises(ValueError, match="finite and >= 0"):
+        parse_systems_spec("uniform:compute=inf")
+
+
+def test_free_network_profile_is_actually_free():
+    params = make_profile(FREE_NETWORK).realize(4, seed=0)
+    assert np.all(params.link_latency_s == 0.0)
+    assert np.all(np.isinf(params.link_bw_Bps))
+    assert np.all(np.isinf(params.up_bw_Bps))
+    assert np.all(np.isinf(params.down_bw_Bps))
+    assert params.server_rtt_s == 0.0
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_profile_draws_are_pure_in_seed(seed):
+    """Same seed => bit-identical straggler/latency realizations; the
+    contract that makes loop/scan/post-hoc pricing agree."""
+    for name in ("lognormal-stragglers", "wan-gossip", "edge-vs-datacenter"):
+        prof = make_profile(name)
+        a = prof.realize(8, seed=seed)
+        b = prof.realize(8, seed=seed)
+        for f in ("compute_s", "link_latency_s", "link_bw_Bps",
+                  "up_bw_Bps", "down_bw_Bps"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+        # latency matrices stay symmetric with a zero diagonal under jitter
+        np.testing.assert_array_equal(a.link_latency_s, a.link_latency_s.T)
+        assert np.all(np.diag(a.link_latency_s) == 0.0)
+
+
+def test_different_seeds_draw_different_stragglers():
+    prof = make_profile("lognormal-stragglers")
+    a = prof.realize(8, seed=0)
+    b = prof.realize(8, seed=1)
+    assert not np.array_equal(a.compute_s, b.compute_s)
+
+
+def test_edge_vs_datacenter_device_classes():
+    params = make_profile("edge-vs-datacenter").realize(6, seed=0)
+    dc, edge = params.compute_s[:3], params.compute_s[3:]
+    assert dc.max() < edge.min()  # datacenter strictly faster
+    assert params.up_bw_Bps[:3].min() > params.up_bw_Bps[3:].max()
+
+
+def test_systems_params_json_round_trip_with_inf():
+    params = make_profile(FREE_NETWORK).realize(3, seed=0)
+    rt = SystemsParams.from_dict(json.loads(json.dumps(params.to_dict())))
+    np.testing.assert_array_equal(rt.link_bw_Bps, params.link_bw_Bps)
+    np.testing.assert_array_equal(rt.compute_s, params.compute_s)
+    assert rt.server_rtt_s == params.server_rtt_s
+
+
+# ---------------------------------------------------------------------------
+# Cost model: hand-computed round times
+# ---------------------------------------------------------------------------
+
+
+def _tiny_model():
+    lat = np.array([[0.0, 0.05, 0.1], [0.05, 0.0, 0.2], [0.1, 0.2, 0.0]])
+    bw = np.full((3, 3), 100.0)
+    return SystemsModel(
+        params=SystemsParams(
+            compute_s=np.array([0.1, 0.2, 0.4]),
+            link_latency_s=lat,
+            link_bw_Bps=bw,
+            up_bw_Bps=np.array([10.0, 5.0, 2.0]),
+            down_bw_Bps=np.array([20.0, 10.0, 4.0]),
+            server_rtt_s=1.0,
+        )
+    )
+
+
+def test_gossip_round_time_gated_by_slowest_realized_edge():
+    m = _tiny_model()
+    edges = np.array([[0, 1], [1, 2]])
+    # compute: 3 steps x slowest agent (0.4); comm: 2 mixes x slowest edge
+    # (1-2: 0.2 latency + 10 bytes / 100 Bps = 0.3)
+    t = m.gossip_round_time(edges, 10, mixes=2, local_steps=3)
+    assert t == pytest.approx(3 * 0.4 + 2 * 0.3)
+    # dropping the slow edge re-gates on the 0-1 link
+    t = m.gossip_round_time(edges[:1], 10, mixes=2, local_steps=3)
+    assert t == pytest.approx(3 * 0.4 + 2 * (0.05 + 0.1))
+    # no realized edges: pure compute
+    assert m.gossip_round_time(np.zeros((0, 2), int), 10, local_steps=3) == (
+        pytest.approx(3 * 0.4)
+    )
+
+
+def test_server_round_time_gated_by_sampled_straggler_tail():
+    m = _tiny_model()
+    # all three sampled: rtt + slowest upload (2 payloads x 10B / 2 Bps = 10)
+    # + slowest download (20B / 4 Bps = 5) + compute over the sample (0.4)
+    t = m.server_round_time(np.array([0, 1, 2]), 10, payloads=2, local_steps=1)
+    assert t == pytest.approx(0.4 + 1.0 + 10.0 + 5.0)
+    # the straggler tail is the *sample*: without agent 2, compute gates on
+    # 0.2 and the wire on agent 1's links
+    t = m.server_round_time(np.array([0, 1]), 10, payloads=2, local_steps=1)
+    assert t == pytest.approx(0.2 + 1.0 + 20.0 / 5.0 + 20.0 / 10.0)
+
+
+# ---------------------------------------------------------------------------
+# History wiring: sim_time_s across drivers, free-network reduction
+# ---------------------------------------------------------------------------
+
+
+def test_free_network_reduces_to_compute_only():
+    """Acceptance pin: zero latency + infinite bandwidth => sim_time_s is
+    exactly local_steps x compute per round, for every round kind."""
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=N_AGENTS, t_o=3, eta_l=0.1, p=0.5, seed=1,
+        systems=FREE_NETWORK, rounds=6, driver="scan", block_size=2,
+    )
+    hist = _experiment(spec).run()
+    assert hist.sim_time_s == [3 * COMPUTE] * 6
+    # a protocol without local updates prices one step per round
+    hist = _experiment(spec.replace(algo="dsgt")).run()
+    assert hist.sim_time_s == [COMPUTE] * 6
+    assert hist.accountant.total_seconds == pytest.approx(6 * COMPUTE)
+
+
+def test_sim_series_identical_across_drivers_and_posthoc():
+    """Same seed => the same simulated seconds, round for round, whether the
+    loop driver, the scan driver, or price_history computed them — under
+    stragglers, link failures, and partial participation at once."""
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=N_AGENTS, t_o=2, eta_l=0.1, p=0.3, seed=4,
+        network="bernoulli:0.4", participation=0.6,
+        systems="lognormal-stragglers", rounds=8, driver="scan", block_size=3,
+    )
+    h_scan = _experiment(spec).run()
+    h_loop = _experiment(spec.replace(driver="loop")).run()
+    assert len(h_scan.sim_time_s) == 8
+    assert h_scan.sim_time_s == h_loop.sim_time_s  # bitwise
+    np.testing.assert_array_equal(
+        price_history(h_scan, spec), np.asarray(h_scan.sim_time_s)
+    )
+    # server rounds priced differently from gossip rounds
+    assert h_scan.accountant.agent_to_server_seconds > 0
+    assert h_scan.accountant.agent_to_agent_seconds > 0
+
+
+def test_runs_without_systems_record_no_sim_time():
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=N_AGENTS, t_o=1, eta_l=0.1, p=0.3, seed=0,
+        rounds=4, driver="scan",
+    )
+    hist = _experiment(spec).run()
+    assert hist.sim_time_s == []
+    assert hist.time_model is None
+    d = hist.to_dict()
+    assert d["sim_time_s"] == [] and d["sim_time_total_s"] == 0.0
+
+
+def test_compression_shortens_simulated_transfers():
+    """The time model prices the *wire* format: q8 gossip messages move
+    ~4x fewer bytes, so transfer-bound gossip rounds get faster."""
+    kw = dict(
+        algo="pisco", n_agents=N_AGENTS, t_o=1, eta_l=0.1, p=0.0, seed=0,
+        systems="uniform:latency=0,bw=1e3,rtt=0", rounds=3, driver="scan",
+    )
+    full = _experiment(ExperimentSpec.create(**kw)).run()
+    q8 = _experiment(ExperimentSpec.create(compression="q8", **kw)).run()
+    assert q8.byte_model.gossip_message_bytes < full.byte_model.gossip_message_bytes
+    assert sum(q8.sim_time_s) < sum(full.sim_time_s)
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec systems= field: round-trips and legacy payloads
+# ---------------------------------------------------------------------------
+
+
+def test_systems_spec_round_trips():
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=N_AGENTS, t_o=2, eta_l=0.15, p=0.3, seed=5,
+        network="bernoulli:0.35", participation=0.6,
+        systems="wan-gossip:latency=0.1", rounds=6,
+    )
+    for c in (
+        ExperimentSpec.from_dict(spec.to_dict()),
+        ExperimentSpec.from_json(spec.to_json()),
+        pickle.loads(pickle.dumps(spec)),
+    ):
+        assert c == spec
+    assert json.loads(spec.to_json())["systems"] == "wan-gossip:latency=0.1"
+
+
+def test_legacy_payloads_without_systems_load_bit_exact():
+    """A pre-sim JSON payload (no ``systems`` key) deserializes to the exact
+    legacy behavior: same spec, no sim series, identical History floats."""
+    spec = ExperimentSpec.create(
+        algo="dsgt", n_agents=N_AGENTS, t_o=1, eta_l=0.1, p=0.3, seed=1,
+        rounds=5, driver="scan",
+    )
+    payload = spec.to_dict()
+    payload.pop("systems")  # what a pre-PR-5 writer emitted
+    old = ExperimentSpec.from_dict(payload)
+    assert old.systems is None and old == spec
+    h_old = _experiment(old).run()
+    h_new = _experiment(spec).run()
+    assert h_old.loss == h_new.loss  # bitwise
+    assert h_old.accountant.per_round_bytes == h_new.accountant.per_round_bytes
+    assert h_old.sim_time_s == [] == h_new.sim_time_s
+
+
+def test_bad_systems_spec_fails_at_construction():
+    with pytest.raises(ValueError, match="unknown systems profile"):
+        ExperimentSpec.create(algo="pisco", n_agents=4, systems="wann-gossip")
+    with pytest.raises(ValueError, match="bad systems override"):
+        ExperimentSpec.create(algo="pisco", n_agents=4, systems="uniform:x=1")
+
+
+# ---------------------------------------------------------------------------
+# Tuner: frontier, free-network reduction, the wan/lan flip
+# ---------------------------------------------------------------------------
+
+
+def _tuner_spec(rounds=60):
+    return ExperimentSpec.create(
+        algo="pisco", n_agents=N_AGENTS, t_o=1, eta_l=0.3, p=0.1, seed=0,
+        rounds=rounds, eval_every=rounds, driver="scan",
+    )
+
+
+def test_tuner_free_ranking_matches_rounds_ranking():
+    """Acceptance pin: with a free network (fixed τ), simulated time is
+    rounds x constant, so the tuner's ranking over p must equal the
+    rounds-to-target ranking — fig4's round-count criterion."""
+    res = tune(
+        _tuner_spec(), _pieces(), p_grid=[0.0, 0.3, 1.0],
+        systems=FREE_NETWORK,
+    )
+    by_rounds = sorted(
+        res.points,
+        key=lambda pt: (
+            0 if pt.rounds_to_target is not None else 1,
+            pt.rounds_to_target if pt.rounds_to_target is not None else 0,
+            pt.final_loss,
+        ),
+    )
+    assert res.ranking() == [(pt.p, pt.t_o) for pt in by_rounds]
+    # and time is literally rounds x (t_o x compute) for every point
+    for pt in res.points:
+        assert pt.total_sim_time_s == pytest.approx(pt.rounds_run * COMPUTE)
+
+
+def test_tuner_flips_to_higher_p_when_gossip_crosses_the_wan():
+    """Acceptance pin: cheap-gossip profiles favor small p, WAN gossip makes
+    server rounds the fast path — the paper's trade-off, on the time axis."""
+    res = tune(
+        _tuner_spec(), _pieces(), p_grid=[0.0, 1.0], systems="lan-gossip",
+    )
+    # compare at a target every configuration reaches, so best-p reflects
+    # time, not reachability
+    target = 1.02 * max(pt.final_loss for pt in res.points)
+    lan = retime(res, "lan-gossip", target_loss=target)
+    wan = retime(res, "wan-gossip", target_loss=target)
+    assert all(pt.time_to_target_s is not None for pt in lan.points)
+    assert all(pt.time_to_target_s is not None for pt in wan.points)
+    assert lan.best.p == 0.0
+    assert wan.best.p == 1.0
+    # repricing never changes the trajectory, only the clock
+    for a, b in zip(
+        sorted(lan.points, key=lambda pt: pt.p),
+        sorted(wan.points, key=lambda pt: pt.p),
+    ):
+        assert a.rounds_to_target == b.rounds_to_target
+        assert a.bytes_to_target == b.bytes_to_target
+        assert a.final_loss == b.final_loss
+
+
+@pytest.mark.slow  # multi-rung sweep; strategy coverage, not an acceptance pin
+def test_tuner_halving_spends_less_and_reports_every_config():
+    grid = tune(
+        _tuner_spec(40), _pieces(), p_grid=[0.0, 0.3, 1.0],
+        systems="lan-gossip", strategy="grid",
+    )
+    halved = tune(
+        _tuner_spec(40), _pieces(), p_grid=[0.0, 0.3, 1.0],
+        systems="lan-gossip", strategy="halving", min_rounds=8,
+    )
+    assert halved.best.rounds_run == 40  # the winner ran the full budget
+    assert sum(pt.rounds_run for pt in halved.points) < sum(
+        pt.rounds_run for pt in grid.points
+    )
+    # eliminated configs still show up in the frontier, at their last rung
+    assert sorted(pt.p for pt in halved.points) == [0.0, 0.3, 1.0]
+    assert halved.best.time_to_target_s is not None
+
+
+def test_tuner_sweeps_tau_and_requires_systems():
+    res = tune(
+        _tuner_spec(16), _pieces(), p_grid=[0.1], tau_grid=(1, 3),
+        systems=FREE_NETWORK,
+    )
+    taus = sorted(pt.t_o for pt in res.points)
+    assert taus == [1, 3]
+    # free network: each round costs t_o x compute
+    for pt in res.points:
+        assert pt.total_sim_time_s == pytest.approx(16 * pt.t_o * COMPUTE)
+    with pytest.raises(ValueError, match="systems profile"):
+        tune(_tuner_spec(8), _pieces(), p_grid=[0.1])
+    with pytest.raises(ValueError, match="strategy"):
+        tune(_tuner_spec(8), _pieces(), p_grid=[0.1],
+             systems=FREE_NETWORK, strategy="bogus")

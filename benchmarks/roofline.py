@@ -9,10 +9,26 @@ from typing import Dict, List, Optional
 
 
 def load_records(art_dir: str = "artifacts/dryrun") -> List[dict]:
+    """Load dry-run records, degrading gracefully: a missing directory
+    yields an empty list (CI smoke runs before any dry-run has happened),
+    and malformed/unreadable files become ``status="load-error"`` records
+    instead of crashing the whole aggregation."""
     recs = []
     for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
-        with open(path) as f:
-            recs.append(json.load(f))
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+            if not isinstance(rec, dict):
+                raise ValueError(f"expected a JSON object, got {type(rec).__name__}")
+        except (OSError, ValueError) as exc:
+            rec = {
+                "status": "load-error",
+                "arch": os.path.basename(path),
+                "shape": "-",
+                "mesh": "-",
+                "error": str(exc),
+            }
+        recs.append(rec)
     return recs
 
 
@@ -26,11 +42,11 @@ def fmt_table(recs: List[dict], mesh: Optional[str] = "single") -> str:
     rows.append(header)
     rows.append(sep)
     for r in recs:
-        if r.get("status") != "ok":
+        if r.get("status") != "ok" or not r.get("roofline"):
             continue
-        if mesh and r["mesh"] != mesh:
+        if mesh and r.get("mesh") != mesh:
             continue
-        if r["step"] == "train_global":
+        if r.get("step") == "train_global":
             continue  # table shows the gossip (technique) round; global in §Dry-run
         ro = r["roofline"]
         useful = f"{ro['useful_ratio']:.2f}" if ro.get("useful_ratio") else "-"
@@ -45,33 +61,44 @@ def fmt_table(recs: List[dict], mesh: Optional[str] = "single") -> str:
 
 
 def summarize(recs: List[dict]) -> Dict:
-    ok = [r for r in recs if r.get("status") == "ok"]
-    fails = [r for r in recs if r.get("status") != "ok"]
+    """Aggregate counts; total on no/partial records (an ``ok`` record
+    missing its roofline payload counts as a failure, not a crash)."""
+    ok = [r for r in recs if r.get("status") == "ok" and r.get("roofline")]
+    fails = [r for r in recs if r not in ok]
     doms: Dict[str, int] = {}
     for r in ok:
-        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+        dom = r["roofline"].get("dominant", "?")
+        doms[dom] = doms.get(dom, 0) + 1
     worst = sorted(
-        (r for r in ok if r["mesh"] == "single" and r["roofline"].get("useful_ratio")),
+        (
+            r
+            for r in ok
+            if r.get("mesh") == "single" and r["roofline"].get("useful_ratio")
+        ),
         key=lambda r: r["roofline"]["useful_ratio"],
     )
     most_coll = sorted(
-        (r for r in ok if r["mesh"] == "single"),
-        key=lambda r: -r["roofline"]["collective_s"],
+        (r for r in ok if r.get("mesh") == "single"),
+        key=lambda r: -r["roofline"].get("collective_s", 0.0),
     )
     return {
         "n_ok": len(ok),
         "n_fail": len(fails),
         "dominant_counts": doms,
         "worst_useful": [
-            (r["arch"], r["shape"], r["step"], r["roofline"]["useful_ratio"])
+            (r.get("arch"), r.get("shape"), r.get("step"),
+             r["roofline"]["useful_ratio"])
             for r in worst[:5]
         ],
         "most_collective_bound": [
-            (r["arch"], r["shape"], r["step"], r["roofline"]["collective_s"])
+            (r.get("arch"), r.get("shape"), r.get("step"),
+             r["roofline"].get("collective_s", 0.0))
             for r in most_coll[:5]
         ],
         "failures": [
-            (r["arch"], r["shape"], r["mesh"], r.get("error", "?")) for r in fails
+            (r.get("arch", "?"), r.get("shape", "?"), r.get("mesh", "?"),
+             r.get("error", "?"))
+            for r in fails
         ],
     }
 

@@ -20,7 +20,7 @@ def _row(name: str, seconds: float, derived: str) -> None:
 # are opt-in (not part of the default sweep).
 KNOWN = (
     "fig4", "fig5", "fig6", "fig7", "table2", "roofline", "compression",
-    "dynamic", "optimizers", "timecost", "ablation", "driver",
+    "dynamic", "optimizers", "timecost", "sparse", "ablation", "driver",
 )
 
 
@@ -182,6 +182,20 @@ def main() -> None:
             time.perf_counter() - t0,
             f"scan_speedup={payload['speedup']:.2f}x",
         )
+
+    if only is None or "sparse" in only:
+        from benchmarks import fig_sparse
+
+        t0 = time.perf_counter()
+        payload = fig_sparse.run(quick=quick)
+        ratio = fig_sparse.memory_ratio(payload["results"])
+        biggest = max(payload["results"].values(), key=lambda r: r["n_agents"])
+        derived = (
+            f"mem_savings_n{biggest['n_agents']}={ratio:.0f}x"
+            f";per_round_ms={biggest['per_round_s'] * 1e3:.1f}"
+            f";parity_n{payload['parity']['n']}={payload['parity']['ok']}"
+        )
+        _row("fig_sparse", time.perf_counter() - t0, derived)
 
     if only is None or "roofline" in only:
         from benchmarks import roofline

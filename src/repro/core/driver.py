@@ -224,9 +224,11 @@ def drive_scan(
         else:
             w_gossip, w_server, messages, participants = net.draw_block(start, stop)
             realized = (messages, participants)
+            # tree-mapped: sparse networks draw pytree operands, dense draw
+            # bare matrices — both convert leafwise
             state, metrics = block_fn(
-                state, jnp.asarray(flags), jnp.asarray(w_gossip),
-                jnp.asarray(w_server), local, comm,
+                state, jnp.asarray(flags), jax.tree.map(jnp.asarray, w_gossip),
+                jax.tree.map(jnp.asarray, w_server), local, comm,
             )
         # one device->host sync for the whole block
         hist.loss.extend(np.asarray(metrics.loss, dtype=np.float64).tolist())
@@ -287,7 +289,8 @@ def drive_loop(
             w_gossip, w_server, messages, participants = net.draw_round(k)
             state, metrics = fn(
                 state, local_batches, comm_batch,
-                jnp.asarray(w_gossip), jnp.asarray(w_server),
+                jax.tree.map(jnp.asarray, w_gossip),
+                jax.tree.map(jnp.asarray, w_server),
             )
             nbytes = hist.byte_model.realized_round_bytes(
                 is_global, messages, participants

@@ -48,9 +48,18 @@ from repro.core.driver import (
     sample_block,
     stack_rounds,
 )
-from repro.core.mixing import MixingOps, make_network_mixing
+from repro.core.mixing import (
+    MixingOps,
+    make_network_mixing,
+    make_sparse_network_mixing,
+)
 from repro.core.pisco import LossFn, PiscoConfig, replicate_params
-from repro.core.topology import make_topology, parse_process_spec
+from repro.core.topology import (
+    make_sparse_topology,
+    make_topology,
+    parse_process_spec,
+    use_sparse_topology,
+)
 from repro.core.trainer import History, record_wall_time
 from repro.optim.update_rules import (
     OPT_POLICIES,
@@ -81,6 +90,16 @@ class ExperimentSpec:
     # Fraction of agents sampled into each server round (uniform m-of-n,
     # doubly stochastic sampled-to-sampled averaging); 1.0 => everyone.
     participation: float = 1.0
+    # Sparse substrate (DESIGN.md §12): True => edge-list/CSR mixing
+    # (segment_sum gossip, O(n + m) state), False => dense n×n, None (the
+    # default, and what every legacy payload deserializes to) => auto — dense
+    # for small fleets (the bit-exact reference), sparse above
+    # SPARSE_AUTO_MIN_AGENTS.
+    sparse: Optional[bool] = None
+    # Neighbor-sampled cohorts: fraction of agents seeding each gossip round
+    # (only the subgraph incident to the cohort is active; sugar for
+    # network="cohort:<frac>", mutually exclusive with an explicit network).
+    cohort: Optional[float] = None
     # Simulated systems-cost profile (repro.sim, DESIGN.md §11): a named
     # heterogeneity scenario — "uniform" | "lognormal-stragglers" |
     # "edge-vs-datacenter" | "wan-gossip" | "lan-gossip" — with optional
@@ -128,6 +147,13 @@ class ExperimentSpec:
             raise ValueError(
                 f"participation must be in (0, 1], got {self.participation}"
             )
+        if self.cohort is not None:
+            if not 0.0 < self.cohort <= 1.0:
+                raise ValueError(f"cohort must be in (0, 1], got {self.cohort}")
+            if self.network is not None:
+                raise ValueError(
+                    "cohort is sugar for network='cohort:<frac>'; pass one, not both"
+                )
         if self.network is not None:
             parse_process_spec(self.network)  # fail fast on bad specs
         if self.systems is not None:
@@ -184,13 +210,35 @@ class ExperimentSpec:
 
     # -- derived pieces -----------------------------------------------------
 
+    @property
+    def effective_network(self) -> Optional[str]:
+        """The network process spec after ``cohort`` sugar is expanded."""
+        if self.cohort is not None:
+            return f"cohort:{self.cohort:g}"
+        return self.network
+
+    @property
+    def use_sparse(self) -> bool:
+        """Whether this spec routes through the sparse edge-list mixers."""
+        return use_sparse_topology(self.sparse, self.config.n_agents)
+
     def make_mixing(self) -> MixingOps:
-        topo = make_topology(
-            self.topology, self.config.n_agents, **dict(self.topology_kwargs)
-        )
-        mixing = make_network_mixing(
-            topo, self.network, self.participation, seed=self.config.seed
-        )
+        if self.use_sparse:
+            stopo = make_sparse_topology(
+                self.topology, self.config.n_agents, **dict(self.topology_kwargs)
+            )
+            mixing = make_sparse_network_mixing(
+                stopo, self.effective_network, self.participation,
+                seed=self.config.seed,
+            )
+        else:
+            topo = make_topology(
+                self.topology, self.config.n_agents, **dict(self.topology_kwargs)
+            )
+            mixing = make_network_mixing(
+                topo, self.effective_network, self.participation,
+                seed=self.config.seed,
+            )
         if self.compression is not None:
             mixing = compress_mixing(
                 mixing,
@@ -392,8 +440,8 @@ class Experiment:
                     wg, ws, messages, participants = net.draw_block(start, stop)
                     realized = (messages, participants)
                     state, metrics = block_fn(
-                        state, jnp.asarray(flags), jnp.asarray(wg),
-                        jnp.asarray(ws), local, comm,
+                        state, jnp.asarray(flags), jax.tree.map(jnp.asarray, wg),
+                        jax.tree.map(jnp.asarray, ws), local, comm,
                     )
                 loss = np.asarray(metrics.loss, dtype=np.float64)  # (block, seeds)
                 gsq = np.asarray(metrics.grad_sq_norm, dtype=np.float64)

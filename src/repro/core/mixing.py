@@ -34,12 +34,18 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.topology import (
     ParticipationProcess,
+    SparseTopology,
     Topology,
     TopologyProcess,
     make_topology_process,
 )
 from repro.utils.compat import shard_map
-from repro.utils.pytree import tree_agent_mean, tree_agent_mix
+from repro.utils.pytree import (
+    tree_agent_masked_mean,
+    tree_agent_mean,
+    tree_agent_mix,
+    tree_agent_mix_sparse,
+)
 
 PyTree = Any
 
@@ -140,6 +146,9 @@ class NetworkContext:
     process: TopologyProcess
     slot: DynamicWSlot
     participation: Optional[ParticipationProcess] = None
+    # Sparse operand mode: draw per-round *edge weights* (pytree operands)
+    # instead of dense matrices — the drivers thread either shape untouched.
+    sparse: bool = False
 
     @property
     def n_agents(self) -> int:
@@ -147,12 +156,33 @@ class NetworkContext:
 
     def draw_block(self, start: int, stop: int):
         """``(w_gossip, w_server, messages, participants)`` for rounds
-        ``[start, stop)``; matrices carry a leading round axis (scan
-        operands), counts are host ints for the byte accountant.  Without
-        participation the server matrix is a (block, 1, 1) placeholder —
-        ``global_avg`` is the exact mean and never reads it."""
-        w_gossip, messages = self.process.draw_block(start, stop)
+        ``[start, stop)``; operands carry a leading round axis (scan
+        operands), counts are host ints for the byte accountant.
+
+        Dense mode: ``w_gossip`` is (block, n, n); without participation the
+        server matrix is a (block, 1, 1) placeholder — ``global_avg`` is the
+        exact mean and never reads it.  Sparse mode: ``w_gossip`` is the
+        pytree ``{'edge_w': (block, 2m), 'self_w': (block, n)}`` over the
+        directed base-edge order and ``w_server`` a (block, n) participant
+        mask (or a (block, 1) placeholder).  Message/participant counts are
+        identical in both modes — byte pricing can't tell them apart."""
         block = stop - start
+        if self.sparse:
+            edge_w, self_w, messages = self.process.draw_sparse_block(start, stop)
+            # duplicate per-undirected-edge weights across both orientations
+            w_gossip = {
+                "edge_w": np.concatenate([edge_w, edge_w], axis=1),
+                "self_w": self_w,
+            }
+            if self.participation is None:
+                w_server = np.zeros((block, 1), dtype=np.float32)
+                participants = np.full(block, self.n_agents, dtype=int)
+            else:
+                w_server, participants = self.participation.draw_mask_block(
+                    start, stop
+                )
+            return w_gossip, w_server, messages, participants
+        w_gossip, messages = self.process.draw_block(start, stop)
         if self.participation is None:
             w_server = np.zeros((block, 1, 1), dtype=np.float32)
             participants = np.full(block, self.n_agents, dtype=int)
@@ -163,7 +193,8 @@ class NetworkContext:
     def draw_round(self, k: int):
         """Single-round form for the legacy loop driver."""
         wg, ws, msgs, parts = self.draw_block(k, k + 1)
-        return wg[0], ws[0], int(msgs[0]), int(parts[0])
+        first = lambda tree: jax.tree.map(lambda a: a[0], tree)
+        return first(wg), first(ws), int(msgs[0]), int(parts[0])
 
 
 def dynamic_dense_mixing(
@@ -229,6 +260,119 @@ def make_network_mixing(
         return dense_mixing(topology)
     process = make_topology_process(network, topology, seed=seed)
     return dynamic_dense_mixing(process, participation=participation)
+
+
+# ---------------------------------------------------------------------------
+# Sparse mixers: gossip as a segment_sum over edges, never materializing n×n
+# ---------------------------------------------------------------------------
+
+
+def _directed_arrays(topo: SparseTopology):
+    """Device arrays for the directed expansion of the base edge list: both
+    orientations of each undirected edge, weights duplicated."""
+    e = topo.edges
+    senders = jnp.asarray(
+        np.concatenate([e[:, 0], e[:, 1]]) if len(e) else np.zeros(0, int),
+        dtype=jnp.int32,
+    )
+    receivers = jnp.asarray(
+        np.concatenate([e[:, 1], e[:, 0]]) if len(e) else np.zeros(0, int),
+        dtype=jnp.int32,
+    )
+    return senders, receivers
+
+
+def sparse_mixing(topology: SparseTopology) -> MixingOps:
+    """Static sparse mixers: gossip is ``segment_sum`` over the fixed edge
+    list with precomputed Metropolis weights — O(n + m) state instead of
+    O(n^2), numerically equal to ``dense_mixing`` over the materialized W
+    up to float reassociation."""
+    senders, receivers = _directed_arrays(topology)
+    edge_w = jnp.asarray(
+        np.concatenate([topology.edge_weight, topology.edge_weight]),
+        dtype=jnp.float32,
+    )
+    self_w = jnp.asarray(topology.self_weight, dtype=jnp.float32)
+    n = topology.n_agents
+
+    def gossip(tree: PyTree) -> PyTree:
+        return tree_agent_mix_sparse(tree, senders, receivers, edge_w, self_w, n)
+
+    return MixingOps(
+        gossip=gossip,
+        global_avg=tree_agent_mean,
+        name=f"sparse/{topology.name}",
+        gossip_edges=topology.n_edges,
+    )
+
+
+def dynamic_sparse_mixing(
+    process: TopologyProcess,
+    *,
+    participation: float = 1.0,
+    participation_seed: Optional[int] = None,
+) -> MixingOps:
+    """Sparse mixers over a time-varying network.
+
+    The per-round operand is the edge-weight pytree the driver stages in the
+    slot (``{'edge_w': (2m,), 'self_w': (n,)}`` in base directed-edge order,
+    dropped edges zeroed) — fixed shapes, so ``lax.scan`` threads it like
+    the dense W_k, at O(n + m) instead of O(n^2) per round.  Partial
+    participation uses the O(n) masked-mean form of the sampled-to-sampled
+    matrix (mean-preserving, so gradient tracking's Lemma-1 invariant
+    survives, same as the dense path).
+    """
+    slot = DynamicWSlot()
+    part = None
+    if participation < 1.0:
+        part = ParticipationProcess(
+            process.n_agents,
+            participation,
+            seed=process.seed if participation_seed is None else participation_seed,
+        )
+    base = process.base
+    senders, receivers = _directed_arrays(base)
+    n = process.n_agents
+
+    def gossip(tree: PyTree) -> PyTree:
+        ops = slot.gossip_w
+        return tree_agent_mix_sparse(
+            tree, senders, receivers, ops["edge_w"], ops["self_w"], n
+        )
+
+    if part is None:
+        global_avg = tree_agent_mean
+    else:
+        def global_avg(tree: PyTree) -> PyTree:
+            return tree_agent_masked_mean(tree, slot.server_w)
+
+    name = f"sparse-dynamic/{process.spec()}/{base.name}"
+    if part is not None:
+        name += f"/m{part.m}of{part.n_agents}"
+    return MixingOps(
+        gossip=gossip,
+        global_avg=global_avg,
+        name=name,
+        gossip_edges=base.n_edges,
+        network=NetworkContext(
+            process=process, slot=slot, participation=part, sparse=True
+        ),
+    )
+
+
+def make_sparse_network_mixing(
+    topology: SparseTopology,
+    network: Optional[str] = None,
+    participation: float = 1.0,
+    *,
+    seed: int = 0,
+) -> MixingOps:
+    """Sparse counterpart of :func:`make_network_mixing` — same selection
+    logic, edge-list operands throughout."""
+    if network is None and participation >= 1.0:
+        return sparse_mixing(topology)
+    process = make_topology_process(network, topology, seed=seed)
+    return dynamic_sparse_mixing(process, participation=participation)
 
 
 # ---------------------------------------------------------------------------

@@ -36,7 +36,8 @@ from repro.core.experiment import ExperimentSpec
 from repro.core.mixing import make_network_mixing
 from repro.core.pisco import PiscoConfig, replicate_params
 from repro.core.schedule import CommAccountant
-from repro.core.topology import make_topology
+from repro.core.mixing import make_sparse_network_mixing
+from repro.core.topology import make_sparse_topology, make_topology
 from repro.optim.update_rules import RULE_NAMES, resolve_update_rules
 from repro.data.synthetic import synthetic_lm_tokens
 from repro.models import get_bundle
@@ -115,9 +116,19 @@ def main(argv=None) -> int:
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--network", default=None,
                     help="dynamic-topology process: static | bernoulli[:q] | "
-                         "matching | roundrobin[:n] (default: frozen base W)")
+                         "matching | roundrobin[:n] | cohort[:frac] "
+                         "(default: frozen base W)")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of agents sampled into each server round")
+    ap.add_argument("--sparse", action="store_true",
+                    help="edge-list/CSR mixing (segment_sum gossip, "
+                         "O(n+m) state) — required for large fleets; "
+                         "default dense n x n (auto-selected by "
+                         "ExperimentSpec above 512 agents)")
+    ap.add_argument("--cohort", type=float, default=None,
+                    help="neighbor-sampled cohorts: fraction of agents "
+                         "seeding each gossip round (sugar for "
+                         "--network cohort:FRAC)")
     ap.add_argument("--systems", default=None,
                     help="simulated systems-cost profile (DESIGN.md §11): "
                          f"{'|'.join(PROFILE_NAMES)} with k=v overrides, e.g. "
@@ -172,13 +183,26 @@ def main(argv=None) -> int:
         n_agents=args.n_agents, t_o=args.t_o, eta_l=args.eta_l,
         eta_c=args.eta_c, p=args.p, seed=args.seed,
     )
-    topo = make_topology(args.topology, args.n_agents)
-    mixing = make_network_mixing(
-        topo, args.network, args.participation, seed=args.seed
+    if args.cohort is not None and args.network is not None:
+        ap.error("--cohort is sugar for --network cohort:FRAC; pass one, not both")
+    network = (
+        f"cohort:{args.cohort:g}" if args.cohort is not None else args.network
     )
+    if args.sparse:
+        topo = make_sparse_topology(args.topology, args.n_agents)
+        mixing = make_sparse_network_mixing(
+            topo, network, args.participation, seed=args.seed
+        )
+    else:
+        topo = make_topology(args.topology, args.n_agents)
+        mixing = make_network_mixing(
+            topo, network, args.participation, seed=args.seed
+        )
+    lam = "n/a" if topo.lambda_w is None else f"{topo.lambda_w:.4f}"
     print(f"arch={cfg.name} params~{cfg.param_count():,} agents={args.n_agents} "
-          f"topology={args.topology} network={args.network or 'frozen'} "
-          f"participation={args.participation:g} lambda_w={topo.lambda_w:.4f} "
+          f"topology={'sparse/' if args.sparse else ''}{args.topology} "
+          f"network={network or 'frozen'} "
+          f"participation={args.participation:g} lambda_w={lam} "
           f"p={args.p}")
 
     sampler = make_lm_sampler(cfg, args.n_agents, args.batch, args.seq, args.t_o, args.seed)
@@ -193,6 +217,7 @@ def main(argv=None) -> int:
         algo=args.algo, n_agents=args.n_agents, t_o=args.t_o,
         eta_l=args.eta_l, eta_c=args.eta_c, p=args.p, seed=args.seed,
         topology=args.topology, network=args.network,
+        sparse=args.sparse or None, cohort=args.cohort,
         participation=args.participation,
         systems=args.systems or ("uniform" if args.tune else None),
         optimizer=args.local_opt, server_optimizer=args.server_opt,
@@ -287,7 +312,8 @@ def main(argv=None) -> int:
                 w_gossip, w_server, _, _ = net.draw_round(k)
                 state, metrics = fn(
                     state, local, comm,
-                    jnp.asarray(w_gossip), jnp.asarray(w_server),
+                    jax.tree.map(jnp.asarray, w_gossip),
+                    jax.tree.map(jnp.asarray, w_server),
                 )
             else:
                 state, metrics = fn(state, local, comm)
@@ -319,8 +345,8 @@ def main(argv=None) -> int:
             if net is not None:
                 w_gossip, w_server, _, _ = net.draw_block(k, stop)
                 state, metrics = block_fn(
-                    state, jnp.asarray(flags), jnp.asarray(w_gossip),
-                    jnp.asarray(w_server), local, comm,
+                    state, jnp.asarray(flags), jax.tree.map(jnp.asarray, w_gossip),
+                    jax.tree.map(jnp.asarray, w_server), local, comm,
                 )
             else:
                 state, metrics = block_fn(state, jnp.asarray(flags), local, comm)

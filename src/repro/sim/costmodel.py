@@ -33,8 +33,11 @@ from repro.core.topology import (
     ParticipationProcess,
     TopologyProcess,
     edge_list,
+    make_sparse_topology,
     make_topology,
     make_topology_process,
+    topology_edges,
+    use_sparse_topology,
 )
 from repro.sim.profiles import SystemsParams, make_profile
 
@@ -212,14 +215,22 @@ def make_time_model(
     if network is not None:
         process = network.process
         part = network.participation
-        base_edges = edge_list(process.base.adj)
+        base_edges = topology_edges(process.base)
     else:
-        topo = make_topology(spec.topology, n, **dict(spec.topology_kwargs))
-        base_edges = edge_list(topo.adj)
-        if spec.network is None and spec.participation >= 1.0:
+        # mirror the spec's dense/sparse selection so large sparse fleets are
+        # priced without an O(n^2) adjacency materialization
+        if use_sparse_topology(getattr(spec, "sparse", None), n):
+            topo = make_sparse_topology(
+                spec.topology, n, **dict(spec.topology_kwargs)
+            )
+        else:
+            topo = make_topology(spec.topology, n, **dict(spec.topology_kwargs))
+        base_edges = topology_edges(topo)
+        net_spec = getattr(spec, "effective_network", spec.network)
+        if net_spec is None and spec.participation >= 1.0:
             process, part = None, None  # legacy frozen-W path
         else:
-            process = make_topology_process(spec.network, topo, seed=seed)
+            process = make_topology_process(net_spec, topo, seed=seed)
             part = (
                 ParticipationProcess(n, spec.participation, seed=seed)
                 if spec.participation < 1.0

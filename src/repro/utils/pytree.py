@@ -80,6 +80,47 @@ def tree_agent_mix(tree, w):
     return jax.tree.map(mix, tree)
 
 
+def tree_agent_mix_sparse(tree, senders, receivers, edge_w, self_w, n_agents):
+    """Sparse gossip over directed edges — the edge-list form of
+    :func:`tree_agent_mix` without ever materializing W.
+
+    Per leaf ``x`` of shape (n, ...):
+
+        out_i = self_w[i] * x_i + sum_{e : senders[e] -> i} edge_w[e] * x_{senders[e]}
+
+    via a gather + ``jax.ops.segment_sum`` scatter-accumulate.  For a
+    symmetric realization the directed arrays are the two orientations of
+    each undirected edge with the weight duplicated; per-round edge dropout
+    is expressed as zeros in ``edge_w`` (fixed shapes, so scan can thread
+    the weights as operands).  Accumulates in float32, like the dense path.
+    """
+
+    def mix(x):
+        xf = x.astype(jnp.float32)
+        extra = (1,) * (x.ndim - 1)
+        contrib = edge_w.reshape(edge_w.shape + extra) * xf[senders]
+        acc = jax.ops.segment_sum(contrib, receivers, num_segments=n_agents)
+        return (self_w.reshape(self_w.shape + extra) * xf + acc).astype(x.dtype)
+
+    return jax.tree.map(mix, tree)
+
+
+def tree_agent_masked_mean(tree, mask):
+    """Sampled-to-sampled server round in O(n): participants (``mask`` 1.0)
+    average among themselves, absentees hold.  Equals applying the dense
+    doubly stochastic S_k of ``ParticipationProcess.server_matrix_at``."""
+
+    def leaf(x):
+        xf = x.astype(jnp.float32)
+        m = mask.reshape(mask.shape + (1,) * (x.ndim - 1))
+        total = jnp.sum(m * xf, axis=0, keepdims=True)
+        count = jnp.maximum(jnp.sum(mask), 1.0)
+        avg = total / count
+        return (m * avg + (1.0 - m) * xf).astype(x.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
 def tree_size(tree) -> int:
     """Total number of scalar elements."""
     return sum(int(x.size) for x in jax.tree.leaves(tree))

@@ -1,0 +1,381 @@
+"""Conformance suite for the sparse-network substrate.
+
+The edge-list/CSR gossip path must be indistinguishable from the dense
+matrix path everywhere they overlap: same Metropolis weights, same training
+trajectories for every registered protocol under both drivers, same realized
+byte charges, and the same Lemma-1 mean-tracking invariant under compression.
+Property tests run through the optional-hypothesis shim (``tests/_hyp.py``),
+so they degrade to deterministic fixed examples when hypothesis is absent.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from conftest import make_logreg_problem
+from repro.core import (
+    Experiment,
+    ExperimentSpec,
+    PiscoConfig,
+    dense_mixing,
+    dynamic_sparse_mixing,
+    is_doubly_stochastic,
+    make_sparse_topology,
+    make_topology,
+    make_topology_process,
+    metropolis_edge_weights,
+    registered_algorithms,
+    replicate_params,
+    run_training,
+    sparse_mixing,
+    use_sparse_topology,
+)
+from repro.core.topology import (
+    SPARSE_AUTO_MIN_AGENTS,
+    metropolis_weights,
+    sparse_topology_from_edges,
+)
+from repro.kernels import sparse_compressed_mix, sparse_mix, topology_edge_arrays
+from repro.kernels.ref import sparse_compressed_mix_ref, sparse_mix_ref
+from repro.utils.pytree import tree_agent_mix_sparse
+
+N_AGENTS = 5
+
+
+def _experiment(spec, n=N_AGENTS):
+    loss_fn, _, sampler_factory, d = make_logreg_problem(n_agents=n)
+    return Experiment(
+        spec,
+        loss_fn=loss_fn,
+        params0={"w": jnp.zeros(d)},
+        sampler_factory=lambda s: sampler_factory(s.config.t_o),
+    )
+
+
+def _random_connected_edges(n, seed, extra_prob=0.3):
+    """Ring ∪ Erdős–Rényi: always connected, random beyond the ring."""
+    rng = np.random.default_rng(seed)
+    edges = {(i, (i + 1) % n) if i < (i + 1) % n else ((i + 1) % n, i)
+             for i in range(n) if n > 1}
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < extra_prob:
+                edges.add((i, j))
+    return np.array(sorted(edges), dtype=np.int64).reshape(-1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Property: segment-sum gossip over the edge list == dense W @ X
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([2, 8, 64]),
+    seed=st.integers(min_value=0, max_value=5),
+    cols=st.sampled_from([1, 7]),
+)
+def test_sparse_gossip_matches_dense_matrix_product(n, seed, cols):
+    edges = _random_connected_edges(n, seed)
+    topo = sparse_topology_from_edges("rand", n, edges)
+    w = topo.dense_w()
+    assert is_doubly_stochastic(w)
+
+    rng = np.random.default_rng(seed + 100)
+    x = jnp.asarray(rng.normal(size=(n, cols)).astype(np.float32))
+    senders = jnp.asarray(
+        np.concatenate([edges[:, 0], edges[:, 1]]), dtype=jnp.int32
+    )
+    receivers = jnp.asarray(
+        np.concatenate([edges[:, 1], edges[:, 0]]), dtype=jnp.int32
+    )
+    edge_w = jnp.asarray(np.concatenate([topo.edge_weight] * 2), jnp.float32)
+    self_w = jnp.asarray(topo.self_weight, jnp.float32)
+
+    out = tree_agent_mix_sparse(x, senders, receivers, edge_w, self_w, n)
+    np.testing.assert_allclose(
+        np.asarray(out), w.astype(np.float32) @ np.asarray(x),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([2, 8, 64]), seed=st.integers(min_value=0, max_value=5))
+def test_edge_metropolis_matches_dense_metropolis(n, seed):
+    """The O(n+m) degree-array construction and the dense n×n construction
+    are the same Metropolis–Hastings matrix."""
+    edges = _random_connected_edges(n, seed)
+    adj = np.zeros((n, n), bool)
+    adj[edges[:, 0], edges[:, 1]] = True
+    adj[edges[:, 1], edges[:, 0]] = True
+    dense = metropolis_weights(adj)
+
+    edge_w, self_w = metropolis_edge_weights(edges, n)
+    rebuilt = np.zeros((n, n))
+    rebuilt[edges[:, 0], edges[:, 1]] = edge_w
+    rebuilt[edges[:, 1], edges[:, 0]] = edge_w
+    np.fill_diagonal(rebuilt, self_w)
+    np.testing.assert_allclose(rebuilt, dense, rtol=0, atol=1e-12)
+
+
+@pytest.mark.parametrize("name", ["ring", "path", "star", "torus", "random_regular"])
+@pytest.mark.parametrize("n", [2, 9, 64])
+def test_sparse_topology_pins_dense_topology_small_n(name, n):
+    if name == "torus" and n == 2:
+        pytest.skip("torus needs a 2d grid")
+    dense = make_topology(name, n, seed=3)
+    sparse = make_sparse_topology(name, n, seed=3)
+    np.testing.assert_allclose(sparse.dense_w(), dense.w, rtol=0, atol=1e-12)
+    assert sparse.connected == dense.connected
+    if sparse.lambda_w is not None:
+        np.testing.assert_allclose(sparse.lambda_w, dense.lambda_w, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# is_doubly_stochastic at scale (the tol=1e-8 bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_doubly_stochastic_tolerance_scales_with_n():
+    """A float32 Metropolis matrix at n ≥ 4096 accumulates ~1e-7 of row-sum
+    error — legitimately doubly stochastic, yet the historical fixed
+    tol=1e-8 (now honestly enforced with rtol=0) rejects it.  The scaled
+    default accepts it while still rejecting genuinely broken matrices.
+    (The sparse constructor is used directly: make_topology would spend
+    minutes on the n² spectral-gap eigendecomposition this test does not
+    need.)"""
+    n = 4096
+    topo = make_sparse_topology("random_regular", n, seed=0, degree=6)
+    w = topo.dense_w().astype(np.float32)
+    row_err = float(np.abs(w.sum(axis=1) - 1.0).max())
+    assert row_err > 1e-8  # float32 rounding actually materialized
+    assert is_doubly_stochastic(w)  # scaled default: accepted
+    assert not is_doubly_stochastic(w, tol=1e-8)  # the old bug, now honest
+
+    bad = w.copy()
+    bad[0, 0] += 0.01
+    assert not is_doubly_stochastic(bad)
+
+
+# ---------------------------------------------------------------------------
+# Full-protocol parity: dense path vs sparse path, both drivers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", registered_algorithms())
+def test_sparse_training_matches_dense_all_protocols(algo):
+    n, rounds = 6, 6
+    loss_fn, _, sampler_factory, d = make_logreg_problem(n_agents=n)
+    x0 = replicate_params({"w": jnp.zeros(d)}, n)
+    cfg = PiscoConfig(n_agents=n, t_o=2, eta_l=0.15, eta_c=1.0, p=0.3, seed=0)
+
+    def run(mixing, driver):
+        return run_training(
+            loss_fn=loss_fn, algo=algo, x0_stacked=x0, cfg=cfg, mixing=mixing,
+            sampler=sampler_factory(cfg.t_o), rounds=rounds,
+            driver=driver, block_size=3,
+        )
+
+    for driver in ("scan", "loop"):
+        hd = run(dense_mixing(make_topology("ring", n)), driver)
+        hs = run(sparse_mixing(make_sparse_topology("ring", n)), driver)
+        np.testing.assert_allclose(hd.loss, hs.loss, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            hd.consensus_err, hs.consensus_err, rtol=1e-4, atol=1e-6
+        )
+        assert hd.accountant.agent_to_agent_bytes == \
+            hs.accountant.agent_to_agent_bytes
+        np.testing.assert_allclose(
+            np.asarray(hd.final_state.x["w"]),
+            np.asarray(hs.final_state.x["w"]),
+            rtol=1e-4, atol=1e-6,
+        )
+
+
+@pytest.mark.parametrize("network", [None, "bernoulli:0.4", "cohort:0.5"])
+def test_sparse_experiment_spec_matches_dense(network):
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=N_AGENTS, t_o=2, eta_l=0.1, p=0.3, seed=2,
+        network=network, rounds=6, driver="scan", block_size=3,
+    )
+    hd = _experiment(spec.replace(sparse=False)).run()
+    hs = _experiment(spec.replace(sparse=True)).run()
+    np.testing.assert_allclose(hd.loss, hs.loss, rtol=1e-5, atol=1e-6)
+    assert hd.accountant.per_round_bytes == hs.accountant.per_round_bytes
+
+
+# ---------------------------------------------------------------------------
+# Lemma-1 invariant under sparse sampled links x compression x participation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("compression", ["q8", "top0.3"])
+@pytest.mark.parametrize("network", ["bernoulli:0.4", "cohort:0.5"])
+def test_gt_invariant_on_sparse_path(network, compression):
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=N_AGENTS, t_o=2, eta_l=0.1, p=0.3, seed=2,
+        network=network, participation=0.6, compression=compression,
+        sparse=True, rounds=8, eval_every=4, driver="scan", block_size=3,
+    )
+    hist = _experiment(spec).run()
+    state = hist.final_state
+    assert state is not None and np.isfinite(hist.loss).all()
+    y_bar = np.asarray(jnp.mean(state.y["w"], axis=0))
+    g_bar = np.asarray(jnp.mean(state.g["w"], axis=0))
+    scale = max(1.0, float(np.abs(g_bar).max()))
+    np.testing.assert_allclose(y_bar, g_bar, atol=2e-5 * scale)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting: sparse edges priced identically to dense
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_realized_gossip_bytes_match_hand_count():
+    """roundrobin:2 on a 4-ring realizes 2 of 4 base edges per round; the
+    sparse accountant must charge the same 2 mixes x 4 directed messages
+    as the dense path — the wire does not care about the W representation."""
+    n, rounds = 4, 4
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=n, t_o=1, eta_l=0.1, p=0.0, seed=0,
+        network="roundrobin:2", sparse=True, rounds=rounds,
+        driver="scan", block_size=2,
+    )
+    hist = _experiment(spec, n=n).run()
+    msg = 16 * 4  # one fp32 message of the d=16 problem
+    per_round = 2 * (2 * 2) * msg  # 2 mixes x (2 realized edges x 2 dirs)
+    assert hist.accountant.per_round_bytes == [per_round] * rounds
+    assert hist.accountant.agent_to_agent_bytes == rounds * per_round
+    h_dense = _experiment(spec.replace(sparse=False), n=n).run()
+    assert h_dense.accountant.per_round_bytes == \
+        hist.accountant.per_round_bytes
+
+
+# ---------------------------------------------------------------------------
+# Cohort sugar + spec serialization
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_field_expands_to_network_spec():
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=8, t_o=1, eta_l=0.1, p=0.3,
+        cohort=0.25, rounds=2,
+    )
+    assert spec.effective_network == "cohort:0.25"
+    with pytest.raises(ValueError, match="cohort"):
+        ExperimentSpec.create(
+            algo="pisco", n_agents=8, t_o=1, eta_l=0.1, p=0.3,
+            cohort=0.25, network="static", rounds=2,
+        )
+
+
+def test_cohort_process_edges_are_seed_incident():
+    proc = make_topology_process(
+        "cohort:0.5", make_sparse_topology("ring", 8), seed=1
+    )
+    for k in range(4):
+        seeds = set(proc.seeds_at(k))
+        assert len(seeds) == 4  # ceil(0.5 * 8)
+        for i, j in proc.edges_at(k):
+            assert i in seeds or j in seeds
+
+
+def test_spec_json_round_trip_and_legacy_payload():
+    spec = ExperimentSpec.create(
+        algo="pisco", n_agents=2048, t_o=2, eta_l=0.1, p=0.1,
+        sparse=True, cohort=0.25, rounds=4,
+    )
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    # a pre-sparse-era payload (no sparse/cohort keys) loads with defaults
+    legacy = json.loads(spec.to_json())
+    del legacy["sparse"], legacy["cohort"]
+    old = ExperimentSpec.from_dict(legacy)
+    assert old.sparse is None and old.cohort is None
+    assert old.effective_network == old.network
+
+
+def test_auto_sparse_threshold():
+    assert not use_sparse_topology(None, SPARSE_AUTO_MIN_AGENTS)
+    assert use_sparse_topology(None, SPARSE_AUTO_MIN_AGENTS + 1)
+    assert use_sparse_topology(True, 2)
+    assert not use_sparse_topology(False, 10**6)
+
+
+# ---------------------------------------------------------------------------
+# Pallas sparse-mix kernels vs oracles (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,n,d", [("ring", 8, 16), ("star", 12, 130), ("torus", 16, 64)])
+def test_sparse_mix_kernel_matches_ref_and_dense(name, n, d):
+    topo = make_sparse_topology(name, n)
+    senders, receivers, edge_w = topology_edge_arrays(topo)
+    self_w = topo.self_weight.astype(np.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    out = sparse_mix(x, senders, receivers, edge_w, self_w, interpret=True)
+    ref = sparse_mix_ref(x, senders, receivers, edge_w, self_w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
+    dense = topo.dense_w().astype(np.float32) @ np.asarray(x)
+    np.testing.assert_allclose(np.asarray(out), dense, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_sparse_compressed_mix_kernel_matches_ref(bits):
+    topo = make_sparse_topology("ring", 10)
+    senders, receivers, edge_w = topology_edge_arrays(topo)
+    self_w = topo.self_weight.astype(np.float32)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(10, 40)).astype(np.float32))
+    out = sparse_compressed_mix(
+        x, senders, receivers, edge_w, self_w, bits=bits, gamma=0.7,
+        interpret=True,
+    )
+    ref = sparse_compressed_mix_ref(
+        x, senders, receivers, edge_w, self_w, bits, gamma=0.7
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    # mean preservation: compressed sparse gossip is still difference-form
+    np.testing.assert_allclose(
+        np.asarray(out).mean(axis=0), np.asarray(x).mean(axis=0),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Large-n smoke: the whole point of the substrate (fast-lane resident)
+# ---------------------------------------------------------------------------
+
+
+def test_large_n_sparse_smoke():
+    """n=4096 sparse training — a size the dense path cannot represent
+    without a 67 MB mixing matrix per operand.  Deliberately NOT marked
+    slow: it pins that large-n stays cheap enough for the CI fast lane."""
+    n, d, rounds = 4096, 4, 3
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+    def loss_fn(params, batch):
+        return 0.5 * jnp.mean((params["w"] - batch) ** 2)
+
+    def sampler(k):
+        return jnp.stack([targets, targets]), targets
+
+    topo = make_sparse_topology("random_regular", n, seed=0, degree=4)
+    # union of 2 Hamiltonian cycles: ~n·deg/2 edges minus any coincidences
+    assert topo.connected and n <= topo.n_edges <= n * 2
+    mixing = dynamic_sparse_mixing(
+        make_topology_process("cohort:0.25", topo, seed=0)
+    )
+    cfg = PiscoConfig(n_agents=n, t_o=2, eta_l=0.1, eta_c=1.0, p=0.2, seed=0)
+    x0 = replicate_params({"w": jnp.zeros(d, jnp.float32)}, n)
+    hist = run_training(
+        "pisco", loss_fn, x0, cfg, mixing, sampler,
+        rounds=rounds, driver="scan", block_size=rounds,
+    )
+    assert np.isfinite(hist.loss).all()
+    assert float(hist.loss[-1]) < float(hist.loss[0])
+    assert hist.final_state.x["w"].shape == (n, d)

@@ -237,7 +237,9 @@ def test_make_topology_process_rejects_unknown_kind():
     base = make_topology("ring", 4)
     with pytest.raises(ValueError, match="unknown topology process"):
         make_topology_process("smallworld", base)
-    assert set(TOPOLOGY_PROCESSES) == {"static", "bernoulli", "matching", "roundrobin"}
+    assert set(TOPOLOGY_PROCESSES) == {
+        "static", "bernoulli", "matching", "roundrobin", "cohort"
+    }
 
 
 # ---------------------------------------------------------------------------

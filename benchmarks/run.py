@@ -20,7 +20,8 @@ def _row(name: str, seconds: float, derived: str) -> None:
 # are opt-in (not part of the default sweep).
 KNOWN = (
     "fig4", "fig5", "fig6", "fig7", "table2", "roofline", "compression",
-    "dynamic", "optimizers", "timecost", "sparse", "ablation", "driver",
+    "dynamic", "optimizers", "timecost", "sparse", "async", "ablation",
+    "driver",
 )
 
 
@@ -151,6 +152,20 @@ def main() -> None:
             f"best_p_lan={flip[0]:g};best_p_wan={flip[1]:g}" if flip else "n/a"
         )
         _row("fig_timecost", time.perf_counter() - t0, derived)
+
+    if only is None or "async" in only:
+        from benchmarks import fig_async
+
+        t0 = time.perf_counter()
+        payload = fig_async.run(quick=quick)
+        speed = fig_async.async_flip(payload["profiles"])
+        trivial_ok = payload["profiles"]["free"]["bit_identical_loss"]
+        derived = (
+            f"free_bit_identical={trivial_ok}"
+            + "".join(f";{k}_speedup={v:.2f}x" for k, v in speed.items()
+                      if k != "free")
+        )
+        _row("fig_async", time.perf_counter() - t0, derived)
 
     if only is None or "table2" in only:
         from benchmarks import table2_complexity

@@ -1,6 +1,6 @@
 """Round drivers: how communication rounds get executed on the device.
 
-Two drivers, one contract — fill a :class:`~repro.core.trainer.History` and
+Three drivers, one contract — fill a :class:`~repro.core.trainer.History` and
 return the final algorithm state:
 
 * **loop** — the legacy per-round Python host loop: one jitted round-function
@@ -17,7 +17,14 @@ return the final algorithm state:
   round, and blocks are cut exactly at eval boundaries so the eval-at-x̄
   semantics match the loop round-for-round.
 
-Both drivers duck-type the history object (``loss`` / ``grad_sq_norm`` /
+* **events** — the asynchronous event-queue driver (:mod:`repro.events`,
+  DESIGN.md §13): round boundaries come from a simulated-clock priority
+  queue over the spec's systems profile instead of a global barrier.  It
+  lives in its own package and consumes this module's shared helpers
+  (:func:`record_block`, :func:`maybe_eval`, :func:`make_block_fn`) — the
+  third consumer, not a third copy.
+
+All drivers duck-type the history object (``loss`` / ``grad_sq_norm`` /
 ``consensus_err`` / ``is_global`` lists, ``accountant``, ``byte_model``,
 ``eval_metrics``) so this module has no import cycle with the trainer.
 """
@@ -37,7 +44,7 @@ EvalFn = Callable[[PyTree], Dict[str, float]]
 
 DEFAULT_BLOCK_SIZE = 32
 
-DRIVERS = ("loop", "scan")
+DRIVERS = ("loop", "scan", "events")
 
 
 def predraw_schedule(schedule, start: int, stop: int) -> np.ndarray:
@@ -166,13 +173,17 @@ def _eval_at_xbar(eval_fn: EvalFn, state, k: int) -> Dict[str, float]:
     return dict(eval_fn(x_bar), round=k)
 
 
-def record_flags(hist, flags: np.ndarray, realized=None, start: int = 0) -> None:
+def record_flags(
+    hist, flags: np.ndarray, realized=None, start: int = 0, seconds=None
+) -> None:
     """Record schedule flags + per-round bytes (and simulated seconds when a
     time model is attached).  ``realized`` is an optional
     ``(messages, participants)`` pair of per-round arrays for dynamic
     networks — bytes are then priced per realized edge/participant instead of
     the static round constants.  ``start`` is the absolute index of the
-    block's first round — the time model's draws are pure in ``(seed, k)``."""
+    block's first round — the time model's draws are pure in ``(seed, k)``.
+    ``seconds`` overrides the time model with an explicit per-round array
+    (the events driver prices rounds from its own event trace)."""
     time_model = getattr(hist, "time_model", None)
     for i, f in enumerate(flags):
         f = bool(f)
@@ -184,10 +195,48 @@ def record_flags(hist, flags: np.ndarray, realized=None, start: int = 0) -> None
             nbytes = hist.byte_model.realized_round_bytes(
                 f, int(messages[i]), int(participants[i])
             )
-        seconds = (
-            time_model.round_time(start + i, f) if time_model is not None else None
-        )
-        hist.accountant.record(f, nbytes, seconds=seconds)
+        if seconds is not None:
+            sec = float(seconds[i])
+        elif time_model is not None:
+            sec = time_model.round_time(start + i, f)
+        else:
+            sec = None
+        hist.accountant.record(f, nbytes, seconds=sec)
+
+
+def record_block(
+    hist, metrics, flags: np.ndarray, realized=None, *, start: int = 0,
+    seconds=None,
+) -> None:
+    """One history append for a block of executed rounds — the single
+    recording path every driver (loop, scan, events) funnels through:
+    extends the metric series and prices flags/bytes/seconds via
+    :func:`record_flags`.  ``metrics`` is a RoundMetrics pytree whose leaves
+    carry a leading round axis (a loop round passes block size 1)."""
+    hist.loss.extend(
+        np.asarray(metrics.loss, dtype=np.float64).reshape(-1).tolist()
+    )
+    hist.grad_sq_norm.extend(
+        np.asarray(metrics.grad_sq_norm, dtype=np.float64).reshape(-1).tolist()
+    )
+    hist.consensus_err.extend(
+        np.asarray(metrics.consensus_err, dtype=np.float64).reshape(-1).tolist()
+    )
+    record_flags(hist, flags, realized, start=start, seconds=seconds)
+
+
+def eval_boundary(k: int, rounds: int, eval_every: int) -> bool:
+    """Whether round ``k`` is an eval round: every ``eval_every`` rounds and
+    always at the final round — the one boundary rule all drivers share (the
+    scan driver also cuts its blocks here so eval-at-x̄ matches the loop)."""
+    return k % eval_every == 0 or k == rounds - 1
+
+
+def maybe_eval(hist, eval_fn: Optional[EvalFn], eval_every: int, rounds: int,
+               state, k: int) -> None:
+    """Append the eval-at-x̄ readout when round ``k`` is an eval boundary."""
+    if eval_fn is not None and eval_boundary(k, rounds, eval_every):
+        hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k))
 
 
 def drive_scan(
@@ -231,17 +280,8 @@ def drive_scan(
                 jax.tree.map(jnp.asarray, w_server), local, comm,
             )
         # one device->host sync for the whole block
-        hist.loss.extend(np.asarray(metrics.loss, dtype=np.float64).tolist())
-        hist.grad_sq_norm.extend(
-            np.asarray(metrics.grad_sq_norm, dtype=np.float64).tolist()
-        )
-        hist.consensus_err.extend(
-            np.asarray(metrics.consensus_err, dtype=np.float64).tolist()
-        )
-        record_flags(hist, flags, realized, start=start)
-        k_end = stop - 1
-        if eval_fn is not None and (k_end % eval_every == 0 or k_end == rounds - 1):
-            hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k_end))
+        record_block(hist, metrics, flags, realized, start=start)
+        maybe_eval(hist, eval_fn, eval_every, rounds, state, stop - 1)
         if stop_when is not None and stop_when(hist):
             break
     return state
@@ -265,7 +305,6 @@ def drive_loop(
     when ``bound.network`` is set they must be the matrix-threaded form from
     :func:`dynamic_round_fns`."""
     net = bound.network
-    time_model = getattr(hist, "time_model", None)
     if round_fns is not None:
         gossip_fn, global_fn = round_fns
     elif net is not None:
@@ -283,8 +322,8 @@ def drive_loop(
         is_global = bool(bound.schedule(k))
         fn = global_fn if is_global else gossip_fn
         if net is None:
+            realized = None
             state, metrics = fn(state, local_batches, comm_batch)
-            nbytes = hist.byte_model.round_bytes(is_global)
         else:
             w_gossip, w_server, messages, participants = net.draw_round(k)
             state, metrics = fn(
@@ -292,19 +331,11 @@ def drive_loop(
                 jax.tree.map(jnp.asarray, w_gossip),
                 jax.tree.map(jnp.asarray, w_server),
             )
-            nbytes = hist.byte_model.realized_round_bytes(
-                is_global, messages, participants
-            )
-        hist.loss.append(float(metrics.loss))
-        hist.grad_sq_norm.append(float(metrics.grad_sq_norm))
-        hist.consensus_err.append(float(metrics.consensus_err))
-        hist.is_global.append(is_global)
-        seconds = (
-            time_model.round_time(k, is_global) if time_model is not None else None
+            realized = ([messages], [participants])
+        record_block(
+            hist, metrics, np.array([is_global]), realized, start=k
         )
-        hist.accountant.record(is_global, nbytes, seconds=seconds)
-        if eval_fn is not None and (k % eval_every == 0 or k == rounds - 1):
-            hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k))
+        maybe_eval(hist, eval_fn, eval_every, rounds, state, k)
         if stop_when is not None and stop_when(hist):
             break
     return state
@@ -315,4 +346,9 @@ def get_driver(name: str) -> Callable:
         return drive_scan
     if name == "loop":
         return drive_loop
+    if name == "events":
+        # local import: the event-queue subsystem builds on this module
+        from repro.events.driver import drive_events
+
+        return drive_events
     raise ValueError(f"unknown driver {name!r}; options: {DRIVERS}")

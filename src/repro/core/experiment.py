@@ -108,6 +108,13 @@ class ExperimentSpec:
     # alongside bytes; None (the default, and what every legacy payload
     # deserializes to) records no sim time — bit-identical behavior.
     systems: Optional[str] = None
+    # Asynchronous execution config (repro.events, DESIGN.md §13), as a spec
+    # string "<rule>[:k=v,...]" over rules constant|poly|buffer with keys
+    # alpha / bound / buffer — e.g. "poly:alpha=0.5,bound=2,buffer=4".  Only
+    # meaningful with driver="events" (which also requires a systems
+    # profile); None (the default, and what every legacy payload deserializes
+    # to) means constant weights, no staleness bound, no server buffer.
+    async_: Optional[str] = None
     compression: Optional[str] = None  # None | "q8" | "q4" | "top0.1" | ...
     error_feedback: bool = True
     # Pluggable update rules (DESIGN.md §10), as declarative strings:
@@ -126,7 +133,9 @@ class ExperimentSpec:
     opt_policy: Optional[str] = None
     rounds: int = 100
     eval_every: int = 1
-    driver: str = "scan"  # "scan" (on-device blocks) | "loop" (legacy)
+    # "scan" (on-device blocks) | "loop" (legacy) | "events" (async event
+    # queue over the systems profile, repro.events)
+    driver: str = "scan"
     block_size: int = DEFAULT_BLOCK_SIZE
 
     def __post_init__(self):
@@ -161,6 +170,20 @@ class ExperimentSpec:
             from repro.sim.profiles import parse_systems_spec
 
             parse_systems_spec(self.systems)  # fail fast on bad profiles
+        if self.async_ is not None:
+            from repro.events.staleness import parse_async_spec
+
+            parse_async_spec(self.async_)  # fail fast on bad async specs
+            if self.driver != "events":
+                raise ValueError(
+                    "async_ only applies to driver='events' "
+                    f"(got driver={self.driver!r})"
+                )
+        if self.driver == "events" and self.systems is None:
+            raise ValueError(
+                "driver='events' needs a systems profile (spec.systems) — "
+                "the event clock is drawn from the fleet realization"
+            )
         # normalize mapping-typed topology kwargs into sorted item tuples so
         # specs stay hashable and JSON round-trips are canonical
         if isinstance(self.topology_kwargs, dict):
@@ -330,7 +353,7 @@ class Experiment:
                 server_payloads=bound.comm.server_payloads,
             )
         )
-        if self.spec.systems is not None:
+        if self.spec.systems is not None and self.spec.driver != "events":
             # local import: repro.sim imports the Experiment API
             from repro.sim.costmodel import make_time_model
 
@@ -343,6 +366,8 @@ class Experiment:
 
     def run(self) -> History:
         spec = self.spec
+        if spec.driver == "events":
+            return self._run_events()
         mixing = self._mixing if self._mixing is not None else spec.make_mixing()
         bound = self._bind(mixing)
         sampler = self._make_sampler(spec)
@@ -356,6 +381,54 @@ class Experiment:
                 bound, state, sampler, spec.rounds, hist,
                 eval_fn=self.eval_fn, eval_every=spec.eval_every,
                 stop_when=self.stop_when, **kw,
+            )
+        hist.final_state = state
+        return hist
+
+    def _run_events(self) -> History:
+        """The events-driver execution path (DESIGN.md §13).
+
+        The event clock needs the whole flag sequence up front (staleness is
+        a property of the entire schedule), so the stateful Bernoulli(p)
+        schedule is pre-drawn exactly once in round order — the same draws
+        the sync drivers would have made.  When the realized fleet makes the
+        run **trivial** (no staleness drops, exactly uniform aggregation
+        weights — any degenerate uniform/free-link profile), the ordinary
+        spec mixing is bound and the executed device program is bit-identical
+        to ``driver="scan"``; otherwise the staleness-aware async mixing
+        carries the engine's per-round decisions into the numerics.
+        """
+        from repro.events.clock import make_event_engine
+        from repro.events.driver import drive_events, make_async_mixing
+
+        spec = self.spec
+        mixing = self._mixing if self._mixing is not None else spec.make_mixing()
+        bound = self._bind(mixing)
+        flags = predraw_schedule(bound.schedule, 0, spec.rounds)
+        byte_model = make_byte_model(
+            mixing,
+            self._x0_stacked(),
+            spec.config.n_agents,
+            mixes_per_round=bound.comm.mixes_per_round,
+            server_payloads=bound.comm.server_payloads,
+        )
+        engine = make_event_engine(
+            spec, byte_model, flags, network=getattr(mixing, "network", None)
+        )
+        if not engine.trivial:
+            mixing = make_async_mixing(spec)
+            bound = self._bind(mixing)
+        sampler = self._make_sampler(spec)
+        _, comm0 = sampler(-1)
+        state = bound.init(self.loss_fn, self._x0_stacked(), comm0)
+        hist = History(byte_model=byte_model)
+        hist.event_trace = engine.trace
+        with record_wall_time(hist):
+            state = drive_events(
+                bound, state, sampler, spec.rounds, hist,
+                engine=engine, eval_fn=self.eval_fn,
+                eval_every=spec.eval_every, stop_when=self.stop_when,
+                block_size=spec.block_size,
             )
         hist.final_state = state
         return hist
@@ -382,6 +455,11 @@ class Experiment:
     def _sweep_seeds(self, seeds: List[int]) -> List[History]:
         if self._sampler_factory is None:
             raise ValueError("sweep(seeds=...) needs a sampler_factory")
+        if self.spec.driver == "events":
+            raise ValueError(
+                "sweep(seeds=...) does not support driver='events'; "
+                "run per-seed via sweep(grid={'seed': [...]}) instead"
+            )
         spec = self.spec
         n_seeds = len(seeds)
         mixing = self._mixing if self._mixing is not None else spec.make_mixing()

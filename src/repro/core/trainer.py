@@ -63,6 +63,13 @@ class History:
     # RoundTimeModel (repro.sim.costmodel) when the spec carries a systems
     # profile; holds live process objects, so excluded from to_dict().
     time_model: Any = None
+    # Events driver only: per-round per-agent staleness counters (list of
+    # length-n lists, one per executed round).  Empty for sync drivers.
+    staleness: List[List[int]] = dataclasses.field(default_factory=list)
+    # Events driver only: the frozen event trace (repro.events.clock) —
+    # gating decisions as numpy arrays, consumed by ``price_history`` for
+    # post-hoc repricing under other fleets.  Excluded from to_dict().
+    event_trace: Any = None
 
     @property
     def sim_time_s(self) -> List[float]:
@@ -123,6 +130,7 @@ class History:
             "wall_time_s": float(self.wall_time_s),
             "sim_time_s": [float(v) for v in self.sim_time_s],
             "sim_time_total_s": float(self.accountant.total_seconds),
+            "staleness": [[int(v) for v in row] for row in self.staleness],
         }
 
 

@@ -32,7 +32,7 @@ from repro.core.driver import (
     predraw_schedule,
     sample_block,
 )
-from repro.core.experiment import ExperimentSpec
+from repro.core.experiment import Experiment, ExperimentSpec
 from repro.core.mixing import make_network_mixing
 from repro.core.pisco import PiscoConfig, replicate_params
 from repro.core.schedule import CommAccountant
@@ -167,8 +167,25 @@ def main(argv=None) -> int:
                     choices=["mix", "keep", "reset"],
                     help="what happens to agent-stacked optimizer buffers at "
                          "communication rounds (default: registry entry's)")
-    ap.add_argument("--driver", default="scan", choices=["scan", "loop"],
-                    help="scan: chunked on-device lax.scan; loop: legacy host loop")
+    ap.add_argument("--driver", default="scan",
+                    choices=["scan", "loop", "events"],
+                    help="scan: chunked on-device lax.scan; loop: legacy host "
+                         "loop; events: async event-queue over --systems "
+                         "(repro.events, DESIGN.md §13)")
+    ap.add_argument("--async", dest="async_spec", default=None,
+                    help="async aggregation rule for --driver events: "
+                         "'<rule>[:k=v,...]' over constant|poly|buffer with "
+                         "keys alpha/bound/buffer, e.g. "
+                         "'poly:alpha=0.5,bound=2,buffer=4'")
+    ap.add_argument("--staleness-bound", type=int, default=None,
+                    help="gossip staleness bound B (events driver): agents "
+                         "more than B rounds behind the front are dropped "
+                         "from their neighbors' mixes until the next server "
+                         "reset")
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="server buffer size m (events driver): a global "
+                         "round fires at the m-th participant push instead "
+                         "of waiting for the straggler tail")
     ap.add_argument("--block-size", type=int, default=16,
                     help="rounds per scan block (scan driver)")
     ap.add_argument("--seed", type=int, default=0)
@@ -210,6 +227,23 @@ def main(argv=None) -> int:
     params = bundle.init(key)
     x0 = replicate_params(params, args.n_agents)
 
+    async_spec = args.async_spec
+    if args.staleness_bound is not None or args.buffer_size is not None:
+        from repro.events.staleness import AsyncConfig, parse_async_spec
+        import dataclasses as _dc
+
+        acfg = parse_async_spec(async_spec) if async_spec else AsyncConfig()
+        if args.staleness_bound is not None:
+            acfg = _dc.replace(acfg, bound=args.staleness_bound)
+        if args.buffer_size is not None:
+            acfg = _dc.replace(acfg, buffer=args.buffer_size)
+        async_spec = acfg.spec()
+    if async_spec is not None and args.driver != "events":
+        ap.error("--async/--staleness-bound/--buffer-size need --driver events")
+    if args.driver == "events" and not args.systems:
+        ap.error("--driver events needs --systems (the event clock is drawn "
+                 "from the fleet profile)")
+
     # Declarative twin of this CLI invocation — what the sim cost model and
     # the autotuner price (network/participation/systems draws are pure
     # functions of this spec).
@@ -220,6 +254,7 @@ def main(argv=None) -> int:
         sparse=args.sparse or None, cohort=args.cohort,
         participation=args.participation,
         systems=args.systems or ("uniform" if args.tune else None),
+        async_=async_spec,
         optimizer=args.local_opt, server_optimizer=args.server_opt,
         lr_schedule=args.lr_schedule, opt_policy=args.opt_policy,
         rounds=args.rounds, driver=args.driver, block_size=args.block_size,
@@ -251,6 +286,28 @@ def main(argv=None) -> int:
             print(f"{pt.p:6.2f} {pt.t_o:4d} {pt.rounds_run:6d} {tts} "
                   f"{pt.total_sim_time_s:11.2f} {pt.final_loss:10.4f}")
         print(f"fastest-to-target: p={result.best.p:g} T_o={result.best.t_o}")
+        return 0
+
+    if args.driver == "events":
+        if args.ckpt_dir:
+            ap.error("checkpointing is not supported with --driver events")
+        hist = Experiment(
+            spec, loss_fn=bundle.loss, params0=params, sampler=sampler
+        ).run()
+        srv = np.asarray(hist.is_global, dtype=bool)
+        secs = np.asarray(hist.sim_time_s, dtype=np.float64)
+        stale = np.asarray(hist.staleness, dtype=np.int64)
+        for k in range(0, args.rounds, max(1, args.log_every)):
+            print(f"round {k:4d} [{'J' if hist.is_global[k] else 'W'}] "
+                  f"loss={hist.loss[k]:.4f} sim_t={secs[: k + 1].sum():.2f}s "
+                  f"max_staleness={int(stale[k].max())}")
+        print(
+            f"done (events, async={spec.async_ or 'constant'}): "
+            f"{args.rounds} rounds, simulated {secs.sum():.2f}s under "
+            f"{args.systems!r} (gossip {secs[~srv].sum():.2f}s / "
+            f"{int((~srv).sum())} rounds, server {secs[srv].sum():.2f}s / "
+            f"{int(srv.sum())} rounds, peak staleness {int(stale.max())})"
+        )
         return 0
 
     start_round = 0

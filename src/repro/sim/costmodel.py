@@ -258,7 +258,27 @@ def price_history(
     Uses the History's own byte model (so compression wire sizes carry over)
     and its executed ``is_global`` flags; network realizations are re-drawn
     pure-in-``(seed, k)``, so this matches the online series exactly.
+
+    Histories produced by the events driver carry a frozen event trace: its
+    gating decisions (active edges, buffer cohorts) are part of the executed
+    numerics, so repricing replays only the per-agent clock recursion under
+    the new fleet (:func:`repro.events.clock.reprice_trace`) — under the
+    original profile this reproduces the online ``sim_time_s`` bit-exactly.
     """
+    trace = getattr(hist, "event_trace", None)
+    if trace is not None:
+        # local import: the events subsystem builds on this module
+        from repro.events.clock import reprice_trace
+
+        systems = systems if systems is not None else spec.systems
+        if systems is None:
+            raise ValueError("spec has no systems profile (pass systems=...)")
+        model = make_systems_model(
+            systems, int(trace["n_agents"]), seed=spec.config.seed
+        )
+        # the clock recursion is causal, so a full-trace replay sliced to the
+        # executed prefix equals replaying the prefix (early stop_when exits)
+        return reprice_trace(trace, model)[: len(hist.is_global)]
     if hist.byte_model is None:
         raise ValueError("history has no byte model; was it driven normally?")
     tm = make_time_model(spec, hist.byte_model, systems=systems)

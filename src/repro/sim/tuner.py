@@ -29,6 +29,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.events.staleness import parse_async_spec, with_staleness_bound
 from repro.sim.costmodel import price_history
 
 
@@ -52,7 +53,7 @@ def _auto_window(budget: int) -> int:
 
 @dataclasses.dataclass
 class TunePoint:
-    """One ``(p, τ)`` configuration's frontier readout."""
+    """One ``(p, τ[, staleness bound])`` configuration's frontier readout."""
 
     p: float
     t_o: int
@@ -62,6 +63,8 @@ class TunePoint:
     time_to_target_s: Optional[float] = None
     rounds_to_target: Optional[int] = None
     bytes_to_target: Optional[int] = None
+    # gossip staleness bound B (events driver only; None elsewhere)
+    staleness_bound: Optional[int] = None
     # runtime attachments (excluded from to_dict)
     spec: Any = None
     history: Any = None
@@ -70,6 +73,7 @@ class TunePoint:
         return {
             "p": self.p,
             "t_o": self.t_o,
+            "staleness_bound": self.staleness_bound,
             "rounds_run": self.rounds_run,
             "final_loss": self.final_loss,
             "total_sim_time_s": self.total_sim_time_s,
@@ -129,9 +133,13 @@ def _readout(
     cum_s = np.cumsum(seconds)
     cum_b = np.cumsum(hist.accountant.per_round_bytes)
     hits = np.nonzero(series <= target_loss)[0]
+    async_spec = getattr(spec, "async_", None)
     pt = TunePoint(
         p=float(spec.config.p),
         t_o=int(spec.config.t_o),
+        staleness_bound=(
+            parse_async_spec(async_spec).bound if async_spec else None
+        ),
         rounds_run=len(hist.loss),
         final_loss=float(series[-1]),
         total_sim_time_s=float(cum_s[-1]) if cum_s.size else 0.0,
@@ -152,6 +160,7 @@ def tune(
     *,
     p_grid: Sequence[float],
     tau_grid: Sequence[Optional[int]] = (None,),
+    staleness_grid: Sequence[Optional[int]] = (None,),
     systems: Optional[str] = None,
     target_loss: Optional[float] = None,
     rounds: Optional[int] = None,
@@ -159,8 +168,8 @@ def tune(
     min_rounds: int = 8,
     window: Optional[int] = None,
 ) -> TunerResult:
-    """Sweep ``p_grid × tau_grid`` variants of ``spec`` and rank them by
-    simulated time-to-target-loss.
+    """Sweep ``p_grid × tau_grid × staleness_grid`` variants of ``spec`` and
+    rank them by simulated time-to-target-loss.
 
     ``pieces`` are the :class:`~repro.core.experiment.Experiment` runtime
     kwargs (``loss_fn``, ``params0``/``x0``, and a ``sampler_factory`` —
@@ -169,6 +178,12 @@ def tune(
     mean (auto: ``min(20, budget // 10)``); ``target_loss=None`` auto-selects
     1.05× the best final smoothed loss across the sweep, so the frontier is
     populated for at least the winning configuration.
+
+    ``staleness_grid`` is the third tuned axis (events driver only): each
+    entry is a gossip staleness bound B substituted into the spec's
+    ``async_`` config via :func:`~repro.events.staleness.with_staleness_bound`
+    — the async analogue of tuning p.  The default ``(None,)`` leaves the
+    spec's async config untouched, so sync sweeps are unchanged.
     """
     from repro.core.experiment import Experiment  # local: avoid import cycle
 
@@ -177,24 +192,37 @@ def tune(
     systems = systems if systems is not None else spec.systems
     if systems is None:
         raise ValueError("tune() needs a systems profile (systems=... or spec.systems)")
+    tunes_staleness = tuple(staleness_grid) != (None,)
+    if tunes_staleness and spec.driver != "events":
+        raise ValueError(
+            "staleness_grid tunes the events driver's gossip bound; "
+            f"spec.driver is {spec.driver!r} (want 'events')"
+        )
     budget = int(rounds if rounds is not None else spec.rounds)
     window = _auto_window(budget) if window is None else max(1, int(window))
 
-    configs = [(float(p), tau) for p in p_grid for tau in tau_grid]
+    configs = [
+        (float(p), tau, b)
+        for p in p_grid for tau in tau_grid for b in staleness_grid
+    ]
     if not configs:
-        raise ValueError("empty p_grid x tau_grid")
+        raise ValueError("empty p_grid x tau_grid x staleness_grid")
 
-    def spec_for(p: float, tau: Optional[int], r: int):
+    def spec_for(p: float, tau: Optional[int], b: Optional[int], r: int):
         kw: Dict[str, Any] = {"systems": systems, "p": p, "rounds": r}
         if tau is not None:
             kw["t_o"] = int(tau)
+        if tunes_staleness:
+            kw["async_"] = with_staleness_bound(
+                getattr(spec, "async_", None), b
+            )
         return spec.replace(**kw)
 
-    def run(p: float, tau: Optional[int], r: int):
-        s = spec_for(p, tau, r)
+    def run(p: float, tau: Optional[int], b: Optional[int], r: int):
+        s = spec_for(p, tau, b, r)
         return s, Experiment(s, **pieces).run()
 
-    results: Dict[Tuple[float, Optional[int]], Tuple[Any, Any]] = {}
+    results: Dict[Tuple[float, Optional[int], Optional[int]], Tuple[Any, Any]] = {}
     if strategy == "grid":
         for cfg in configs:
             results[cfg] = run(*cfg, budget)

@@ -121,6 +121,27 @@ def tree_agent_masked_mean(tree, mask):
     return jax.tree.map(leaf, tree)
 
 
+def tree_agent_weighted_mean(tree, w, keep):
+    """Staleness-weighted server round in O(n): ``out_i = keep_i * x_i +
+    (1 - keep_i) * sum_j w_j x_j``.
+
+    ``w`` is an (n,) weight vector summing to one over the participating
+    agents (zeros elsewhere) — the buffered-async aggregator's staleness
+    weights; ``keep`` is 1.0 for agents holding their iterate (absentees).
+    With uniform weights over the participants this equals
+    :func:`tree_agent_masked_mean`; with ``keep = 0`` and ``w = 1/n`` it is
+    the plain global average up to float reassociation."""
+
+    def leaf(x):
+        xf = x.astype(jnp.float32)
+        wv = w.reshape(w.shape + (1,) * (x.ndim - 1))
+        kv = keep.reshape(keep.shape + (1,) * (x.ndim - 1))
+        avg = jnp.sum(wv * xf, axis=0, keepdims=True)
+        return (kv * xf + (1.0 - kv) * avg).astype(x.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
 def tree_size(tree) -> int:
     """Total number of scalar elements."""
     return sum(int(x.size) for x in jax.tree.leaves(tree))

@@ -1,0 +1,333 @@
+"""Async event-queue subsystem conformance (DESIGN.md §13).
+
+Pins the contracts of ``repro.events``:
+
+* staleness rules are hand-computable arithmetic; async-spec strings
+  round-trip through their canonical form;
+* the :class:`~repro.events.EventEngine` clock recursion matches hand-derived
+  timelines on tiny hand-built fleets (gossip wait chains, bounded-staleness
+  drops, buffer-of-m server fire times);
+* under degenerate fleets (``FREE_NETWORK``, uniform) the events driver is
+  **bit-identical** to the scan driver for PISCO and the baselines — async
+  costs nothing when nobody straggles;
+* under a heterogeneous fleet the async run is deterministic in the seed,
+  strictly cheaper in simulated time than its sync twin, and its frozen
+  event trace re-prices to the online seconds exactly;
+* ``ExperimentSpec.async_`` validates, JSON round-trips, and stays
+  backward-compatible with pre-events payloads; the tuner sweeps the
+  staleness bound as a third axis only for the events driver.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_logreg_problem
+from repro.core import Experiment, ExperimentSpec
+from repro.core.driver import DRIVERS, get_driver
+from repro.events import (
+    AsyncConfig,
+    EventEngine,
+    RULES,
+    drive_events,
+    parse_async_spec,
+    reprice_trace,
+    staleness_weights,
+    with_staleness_bound,
+)
+from repro.sim import FREE_NETWORK, SystemsModel, SystemsParams, price_history, tune
+
+N_AGENTS = 6
+ROUNDS = 20
+
+
+def _pieces(n=N_AGENTS):
+    loss_fn, _, sampler_factory, d = make_logreg_problem(n_agents=n)
+    return dict(
+        loss_fn=loss_fn,
+        params0={"w": jnp.zeros(d)},
+        sampler_factory=lambda s: sampler_factory(s.config.t_o),
+    )
+
+
+def _spec(**kw):
+    base = dict(
+        algo="pisco", n_agents=N_AGENTS, t_o=2, eta_l=0.1, p=0.2, seed=0,
+        rounds=ROUNDS,
+    )
+    base.update(kw)
+    return ExperimentSpec.create(**base)
+
+
+@pytest.fixture(scope="module")
+def straggler_pair():
+    """One sync/async twin pair under the straggler fleet, shared across
+    tests (each run is seconds of jit; don't re-run per assertion)."""
+    sync_spec = _spec(driver="scan", systems="lognormal-stragglers")
+    async_spec = sync_spec.replace(
+        driver="events", async_="poly:alpha=0.5,bound=1,buffer=3"
+    )
+    h_sync = Experiment(sync_spec, **_pieces()).run()
+    h_async = Experiment(async_spec, **_pieces()).run()
+    return sync_spec, h_sync, async_spec, h_async
+
+
+# ---------------------------------------------------------------------------
+# Staleness rules: spec grammar + hand-computed weights
+# ---------------------------------------------------------------------------
+
+
+def test_async_spec_round_trips_through_canonical_form():
+    for s in (
+        "constant", "poly", "poly:alpha=1.0", "poly:bound=2",
+        "buffer:buffer=4", "poly:alpha=0.25,bound=3,buffer=2",
+    ):
+        cfg = parse_async_spec(s)
+        assert cfg.rule in RULES
+        assert parse_async_spec(cfg.spec()) == cfg
+    cfg = parse_async_spec("poly:alpha=1.0,bound=2,buffer=3")
+    assert (cfg.alpha, cfg.bound, cfg.buffer) == (1.0, 2, 3)
+    assert parse_async_spec("poly:bound=inf").bound is None
+
+
+@pytest.mark.parametrize("bad", ["warp", "poly:zzz=1", "poly:alpha=", ""])
+def test_async_spec_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        parse_async_spec(bad)
+
+
+def test_with_staleness_bound_substitutes_only_the_bound():
+    s = with_staleness_bound("poly:alpha=1.0,buffer=2", 3)
+    cfg = parse_async_spec(s)
+    assert (cfg.rule, cfg.alpha, cfg.bound, cfg.buffer) == ("poly", 1.0, 3, 2)
+    assert parse_async_spec(with_staleness_bound(s, None)).bound is None
+    assert parse_async_spec(with_staleness_bound(None, 2)).bound == 2
+
+
+def test_staleness_weights_hand_computed():
+    # constant: staleness is ignored, uniform over agents
+    w = staleness_weights(np.array([0, 1, 2]), AsyncConfig(rule="constant"))
+    np.testing.assert_allclose(w, [1 / 3] * 3)
+    # poly alpha=1: raw (1+s)^-1 = [1, 1/2, 1/4] -> normalized [4,2,1]/7
+    w = staleness_weights(
+        np.array([0, 1, 3]), AsyncConfig(rule="poly", alpha=1.0)
+    )
+    np.testing.assert_allclose(w, np.array([4, 2, 1]) / 7)
+    # buffer: the on-time cohort splits the mass, late pushes get zero
+    w = staleness_weights(
+        np.array([0, 0, 1]), AsyncConfig(rule="buffer", buffer=2),
+        ontime=np.array([True, True, False]),
+    )
+    np.testing.assert_allclose(w, [0.5, 0.5, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# EventEngine clock recursion on hand-built fleets
+# ---------------------------------------------------------------------------
+
+
+def _fleet(compute, lat=None, up_bw=None, down_bw=None, rtt=0.0):
+    n = len(compute)
+    inf = np.full((n, n), np.inf)
+    return SystemsModel(
+        params=SystemsParams(
+            compute_s=np.asarray(compute, dtype=np.float64),
+            link_latency_s=(
+                np.zeros((n, n)) if lat is None else np.asarray(lat, float)
+            ),
+            link_bw_Bps=inf,
+            up_bw_Bps=np.ones(n) if up_bw is None else np.asarray(up_bw, float),
+            down_bw_Bps=(
+                np.ones(n) if down_bw is None else np.asarray(down_bw, float)
+            ),
+            server_rtt_s=float(rtt),
+        ),
+    )
+
+
+def test_gossip_wait_chain_hand_computed():
+    # path 0-1-2, unit compute, edge costs 0.5 and 1.5: each round every
+    # agent waits for its slowest incident message -> the 1-2 edge gates the
+    # frontier at compute + 1.5 = 2.5 s/round
+    lat = np.zeros((3, 3))
+    lat[0, 1] = lat[1, 0] = 0.5
+    lat[1, 2] = lat[2, 1] = 1.5
+    eng = EventEngine(
+        model=_fleet([1.0, 1.0, 1.0], lat=lat),
+        cfg=AsyncConfig(),
+        flags=np.zeros(2, dtype=bool),
+        base_edges=np.array([[0, 1], [1, 2]]),
+        gossip_bytes=8,
+    )
+    assert eng.trivial  # nobody straggles past the quantum, nothing dropped
+    np.testing.assert_allclose(eng.seconds, [2.5, 2.5])
+    assert eng.staleness.tolist() == [[0, 0, 0], [0, 0, 0]]
+    assert eng.messages.tolist() == [4, 4]  # 2 directed per active edge
+
+
+def test_bounded_staleness_drops_the_straggler():
+    # agent 2 is 5x slower; quantum q = median compute = 1, so it is late
+    # from round 0; bound 0 drops its edge and it stops gating the frontier
+    eng = EventEngine(
+        model=_fleet([1.0, 1.0, 5.0]),
+        cfg=AsyncConfig(rule="constant", bound=0),
+        flags=np.zeros(2, dtype=bool),
+        base_edges=np.array([[0, 1], [1, 2]]),
+        gossip_bytes=8,
+    )
+    assert not eng.trivial
+    np.testing.assert_allclose(eng.seconds, [1.0, 1.0])
+    assert eng.staleness.tolist() == [[0, 0, 1], [0, 0, 2]]
+    # edge (0,1) stays, edge (1,2) dropped -> 2 directed messages
+    assert eng.messages.tolist() == [2, 2]
+
+
+def test_buffered_server_round_hand_computed():
+    # compute [1,2,3], upload 4 s, download 2 s, rtt 0.5: pushes at [5,6,7];
+    # buffer-of-2 fires at the 2nd push (t=6), agent 2 is late (weight 0),
+    # and the broadcast lands at 6 + 0.5 + 2 = 8.5
+    eng = EventEngine(
+        model=_fleet([1.0, 2.0, 3.0], up_bw=[1, 1, 1], down_bw=[2, 2, 2],
+                     rtt=0.5),
+        cfg=AsyncConfig(rule="buffer", buffer=2),
+        flags=np.ones(1, dtype=bool),
+        base_edges=np.array([[0, 1]]),
+        server_bytes=4,
+    )
+    assert not eng.trivial
+    np.testing.assert_allclose(eng.seconds, [8.5])
+    np.testing.assert_allclose(eng.weights[0], [0.5, 0.5, 0.0])
+    assert eng.staleness[0].tolist() == [0, 0, 1]
+
+
+def test_reprice_trace_same_fleet_is_bit_exact():
+    eng = EventEngine(
+        model=_fleet([1.0, 1.0, 5.0], up_bw=[1, 1, 1], down_bw=[2, 2, 2],
+                     rtt=0.5),
+        cfg=AsyncConfig(rule="poly", bound=0, buffer=2),
+        flags=np.array([False, True, False, False]),
+        base_edges=np.array([[0, 1], [1, 2]]),
+        gossip_bytes=8,
+        server_bytes=4,
+    )
+    assert np.array_equal(reprice_trace(eng.trace, eng.model), eng.seconds)
+    # repricing on a faster fleet keeps the gating but shrinks the clock
+    fast = _fleet([0.1, 0.1, 0.5], up_bw=[10, 10, 10], down_bw=[20, 20, 20])
+    assert reprice_trace(eng.trace, fast).sum() < eng.seconds.sum()
+
+
+# ---------------------------------------------------------------------------
+# Degenerate fleets: the events driver IS the scan driver, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["pisco", "dsgt", "fedavg"])
+def test_events_free_network_bit_identical_to_scan(algo):
+    kw = dict(algo=algo, rounds=12, systems=FREE_NETWORK)
+    h_scan = Experiment(_spec(driver="scan", **kw), **_pieces()).run()
+    h_ev = Experiment(_spec(driver="events", **kw), **_pieces()).run()
+    assert h_scan.is_global == h_ev.is_global
+    np.testing.assert_array_equal(h_scan.loss, h_ev.loss)
+    assert np.max(h_ev.staleness) == 0  # nobody straggles on a free fleet
+
+
+def test_events_uniform_fleet_matches_sync_times_too():
+    # a uniform (but non-free) fleet keeps all clocks in lockstep: same
+    # numerics AND the availability frontier advances at the sync round time
+    kw = dict(rounds=12, systems="uniform")
+    h_scan = Experiment(_spec(driver="scan", **kw), **_pieces()).run()
+    h_ev = Experiment(_spec(driver="events", **kw), **_pieces()).run()
+    np.testing.assert_array_equal(h_scan.loss, h_ev.loss)
+    np.testing.assert_allclose(h_ev.sim_time_s, h_scan.sim_time_s, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous fleet: determinism, time win, trace repricing
+# ---------------------------------------------------------------------------
+
+
+def test_async_beats_the_barrier_under_stragglers(straggler_pair):
+    _, h_sync, _, h_async = straggler_pair
+    assert h_sync.is_global == h_async.is_global  # same predrawn schedule
+    assert np.max(h_async.staleness) > 0  # the straggler actually straggled
+    assert sum(h_async.sim_time_s) < sum(h_sync.sim_time_s)
+    # convergence is not free-lunch-broken: the async run still trains
+    assert h_async.loss[-1] < h_async.loss[3]
+
+
+def test_events_run_is_seed_deterministic(straggler_pair):
+    _, _, async_spec, h_async = straggler_pair
+    h2 = Experiment(async_spec, **_pieces()).run()
+    np.testing.assert_array_equal(h_async.loss, h2.loss)
+    np.testing.assert_array_equal(h_async.sim_time_s, h2.sim_time_s)
+    assert h_async.staleness == h2.staleness
+
+
+def test_event_trace_reprices_online_seconds_exactly(straggler_pair):
+    _, _, async_spec, h_async = straggler_pair
+    same = price_history(h_async, async_spec)
+    assert np.array_equal(same, np.asarray(h_async.sim_time_s))
+    wan = price_history(h_async, async_spec, systems="wan-gossip")
+    assert wan.shape == same.shape
+    assert not np.array_equal(wan, same)
+
+
+def test_history_exports_trace_and_staleness(straggler_pair):
+    _, _, _, h_async = straggler_pair
+    for key in ("flags", "active", "gate", "participants", "n_agents"):
+        assert key in h_async.event_trace
+    payload = h_async.to_dict()
+    assert "event_trace" not in payload  # bulk arrays stay off the JSON path
+    assert len(payload["staleness"]) == ROUNDS
+    assert all(len(row) == N_AGENTS for row in payload["staleness"])
+
+
+# ---------------------------------------------------------------------------
+# Spec surface: validation, JSON, registry, tuner axis
+# ---------------------------------------------------------------------------
+
+
+def test_events_driver_registered():
+    assert "events" in DRIVERS
+    assert get_driver("events") is drive_events
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):  # async_ is an events-driver knob
+        _spec(driver="scan", systems="uniform", async_="constant")
+    with pytest.raises(ValueError):  # the event clock needs a fleet
+        _spec(driver="events")
+    with pytest.raises(ValueError):  # malformed rule fails at spec build
+        _spec(driver="events", systems="uniform", async_="warp")
+
+
+def test_spec_async_json_round_trip_and_legacy_payload():
+    spec = _spec(
+        driver="events", systems="lognormal-stragglers",
+        async_="poly:alpha=1.0,bound=2,buffer=3",
+    )
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    # a pre-events payload (no async_ key) loads with the default
+    legacy = json.loads(spec.to_json())
+    del legacy["async_"]
+    assert ExperimentSpec.from_dict(legacy).async_ is None
+
+
+def test_tuner_sweeps_staleness_bound_for_events_specs():
+    spec = _spec(
+        driver="events", systems="lognormal-stragglers", rounds=8,
+        async_="poly:alpha=0.5,bound=2,buffer=3",
+    )
+    res = tune(spec, _pieces(), p_grid=[0.2], staleness_grid=[1, None])
+    assert {pt.staleness_bound for pt in res.points} == {1, None}
+    assert all(
+        pt.to_dict()["staleness_bound"] == pt.staleness_bound
+        for pt in res.points
+    )
+
+
+def test_tuner_staleness_grid_requires_events_driver():
+    spec = _spec(driver="scan", systems="lognormal-stragglers")
+    with pytest.raises(ValueError):
+        tune(spec, _pieces(), p_grid=[0.2], staleness_grid=[1], rounds=4)

@@ -79,6 +79,8 @@ def run_pisco_variant(
     server_optimizer: Optional[str] = None,
     lr_schedule: Optional[str] = None,
     opt_policy: Optional[str] = None,
+    adversary: Optional[str] = None,
+    robust_agg: str = "mean",
 ):
     spec = ExperimentSpec.create(
         algo=algo,
@@ -98,6 +100,8 @@ def run_pisco_variant(
         server_optimizer=server_optimizer,
         lr_schedule=lr_schedule,
         opt_policy=opt_policy,
+        adversary=adversary,
+        robust_agg=robust_agg,
         rounds=rounds,
         eval_every=eval_every,
         driver=driver,

@@ -1,0 +1,180 @@
+"""How many Byzantine agents can PISCO survive?  (DESIGN.md §14)
+
+The §5.1 logreg workload (iid split) on n=16 agents with f = ⌈n/5⌉ = 4
+sign-flippers (``adversary="signflip:f=0.2"``): the corrupted agents
+transmit ``-x`` in every payload while the honest twelve run PISCO
+unchanged.  The attack targets a *warm* fleet — a clean pretraining phase
+first converges the model, then the Byzantine agents switch on — because a
+sign-flip attack from a zero init is degenerate in an instructive way: while
+``‖x‖`` is below the per-coordinate batch-noise floor, flipped payloads are
+statistically indistinguishable from honest ones, every symmetric
+aggregation rule halves the mean each round, and the model self-locks at
+the origin (the benchmark's ``origin_trap`` row records this regime).
+
+From the warm point, in the federated regime (p=1.0, every round a server
+round — Remark 2) all communication passes through the server rule, so the
+rule *is* the defense:
+
+* **plain mean** — four flipped uploads contract the aggregate by
+  (n−2f)/n per round; the trained model collapses to the origin trap and
+  final loss lands far from the clean run's;
+* **trimmed mean** (``robust_agg="trimmed"``, trims ⌈f·n⌉ per side) — the
+  flipped coordinates are outliers relative to the warm iterate and get
+  discarded; final loss stays within 10% of the clean continuation — the
+  robustness flip ``BENCH_robust.json`` pins.  **median** matches it;
+* **krum** — selects one agent's whole vector, which feeds single-agent
+  batch noise into the gradient tracker every round (Lemma 1 only survives
+  averaging); it degrades badly and is reported as a negative result.
+
+A gossip-regime row (p=0.1, trimmed) documents the boundary: robust rules
+guard *server* rounds only — corruption injected through gossip mixing
+reaches honest agents between server rounds (the FedDec observation that
+the p2p/server mix changes what a bad peer can corrupt).
+
+    PYTHONPATH=src python -m benchmarks.fig_robust [--quick]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import run_pisco_variant, save_result
+from repro.data import FederatedDataset
+from repro.data.synthetic import synthetic_a9a
+from repro.models import simple as S
+from repro.sim.tuner import _smoothed
+
+N_AGENTS = 16
+ADVERSARY = "signflip:f=0.2"  # ceil(0.2 * 16) = 4 Byzantine agents
+
+ROWS = (
+    # (label, adversary, robust_agg, p)
+    ("clean", None, "mean", 1.0),
+    ("signflip+mean", ADVERSARY, "mean", 1.0),
+    ("signflip+trimmed", ADVERSARY, "trimmed", 1.0),
+    ("signflip+median", ADVERSARY, "median", 1.0),
+    ("signflip+krum", ADVERSARY, "krum", 1.0),
+    # robust server rule with mostly-gossip rounds: corruption leaks through
+    # the p2p path the server rule never sees
+    ("signflip+trimmed@p0.1", ADVERSARY, "trimmed", 0.1),
+)
+
+
+def make_iid_workload(quick: bool, seed: int):
+    """Logreg on the iid partition: honest uploads cluster tightly, so the
+    Byzantine/robustness effect is isolated from heterogeneity bias (the
+    sorted split's honest extremes would themselves be trimmed)."""
+    n_samples = 4000 if quick else 32560
+    x, y = synthetic_a9a(n_samples, seed=seed)
+    data = FederatedDataset.from_arrays(
+        x, y, N_AGENTS, heterogeneous=False, seed=seed
+    )
+    loss_fn = functools.partial(S.logreg_loss, rho=0.01)
+    xe, ye = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+
+    def eval_fn(params):
+        return {"test_acc": float(S.logreg_accuracy(params, xe, ye))}
+
+    return data, loss_fn, eval_fn, {"w": jnp.zeros((x.shape[1],), jnp.float32)}
+
+
+def _readout(hist, window: int) -> dict:
+    series = _smoothed(hist.loss, window)
+    out = {
+        "rounds": len(hist.loss),
+        "final_loss": float(series[-1]),
+        "final_test_acc": float(hist.eval_metrics[-1]["test_acc"]),
+        "adversary_mask": hist.adversary_mask,
+        "total_bytes": int(hist.accountant.total_bytes),
+    }
+    if hist.eval_per_agent:
+        last = hist.eval_per_agent[-1]
+        out["final_honest_test_acc"] = float(last["honest_test_acc"])
+        out["final_byz_test_acc"] = float(last["byz_test_acc"])
+    return out
+
+
+def run(quick: bool = True, seed: int = 0) -> dict:
+    rounds = 100 if quick else 300
+    window = max(1, min(20, rounds // 10))
+    data, loss_fn, eval_fn, params0 = make_iid_workload(quick, seed)
+
+    # phase 1 — clean pretraining to a warm iterate (the model under attack)
+    h_warm, _ = run_pisco_variant(
+        data=data, loss_fn=loss_fn, eval_fn=eval_fn, params0=params0,
+        p=1.0, t_o=2, eta_l=0.1, rounds=rounds, seed=seed, eval_every=rounds,
+    )
+    warm = jax.tree.map(lambda v: jnp.mean(v, axis=0), h_warm.final_state.x)
+
+    # phase 2 — the Byzantine agents switch on; small steps keep the honest
+    # noise floor below the flip separation (see module docstring)
+    rows = {}
+    for label, adversary, robust_agg, p in ROWS:
+        hist, _ = run_pisco_variant(
+            data=data, loss_fn=loss_fn, eval_fn=eval_fn, params0=warm,
+            p=p, t_o=2, eta_l=0.02, rounds=rounds, seed=seed + 1,
+            eval_every=max(1, rounds // 4),
+            adversary=adversary, robust_agg=robust_agg,
+        )
+        rows[label] = _readout(hist, window)
+
+    # the degenerate regime for the record: attacking a zero init self-locks
+    # at the origin for every rule (loss pinned at ln 2)
+    h_trap, _ = run_pisco_variant(
+        data=data, loss_fn=loss_fn, eval_fn=eval_fn, params0=params0,
+        p=1.0, t_o=2, eta_l=0.1, rounds=rounds, seed=seed,
+        eval_every=rounds, adversary=ADVERSARY, robust_agg="trimmed",
+    )
+
+    clean = rows["clean"]["final_loss"]
+    # the robustness flip: within 10% of the clean final loss or not
+    within = lambda row: rows[row]["final_loss"] <= 1.10 * clean
+    payload = {
+        "bench": "fig_robust",
+        "quick": quick,
+        "n_agents": N_AGENTS,
+        "adversary": ADVERSARY,
+        "n_byzantine": int(np.sum(rows["signflip+mean"]["adversary_mask"])),
+        "warm_final_loss": float(_smoothed(h_warm.loss, window)[-1]),
+        "rows": rows,
+        "origin_trap": _readout(h_trap, window),
+        "clean_final_loss": clean,
+        "trimmed_within_10pct": bool(within("signflip+trimmed")),
+        "mean_within_10pct": bool(within("signflip+mean")),
+        "robustness_flip": bool(
+            within("signflip+trimmed") and not within("signflip+mean")
+        ),
+    }
+    save_result("BENCH_robust", payload)
+    return payload
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    payload = run(quick=args.quick)
+    clean = payload["clean_final_loss"]
+    print(f"n={payload['n_agents']}, adversary={payload['adversary']} "
+          f"({payload['n_byzantine']} Byzantine), warm loss "
+          f"{payload['warm_final_loss']:.4f}, clean final loss {clean:.4f}")
+    print(f"{'variant':>24} | {'final loss':>10} | {'vs clean':>8} | "
+          f"{'test acc':>8}")
+    for label, row in payload["rows"].items():
+        ratio = row["final_loss"] / max(clean, 1e-12)
+        print(f"{label:>24} | {row['final_loss']:10.4f} | {ratio:8.2f}x | "
+              f"{row['final_test_acc']:8.3f}")
+    trap = payload["origin_trap"]
+    print(f"{'origin trap (cold init)':>24} | {trap['final_loss']:10.4f} | "
+          f"{'---':>8} | {trap['final_test_acc']:8.3f}")
+    print(f"robustness flip (trimmed within 10%, mean not): "
+          f"{payload['robustness_flip']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,8 +20,8 @@ def _row(name: str, seconds: float, derived: str) -> None:
 # are opt-in (not part of the default sweep).
 KNOWN = (
     "fig4", "fig5", "fig6", "fig7", "table2", "roofline", "compression",
-    "dynamic", "optimizers", "timecost", "sparse", "async", "ablation",
-    "driver",
+    "dynamic", "optimizers", "timecost", "sparse", "async", "robust",
+    "ablation", "driver",
 )
 
 
@@ -166,6 +166,22 @@ def main() -> None:
                       if k != "free")
         )
         _row("fig_async", time.perf_counter() - t0, derived)
+
+    if only is None or "robust" in only:
+        from benchmarks import fig_robust
+
+        t0 = time.perf_counter()
+        payload = fig_robust.run(quick=quick)
+        rows = payload["rows"]
+        clean = payload["clean_final_loss"]
+        trim_ratio = rows["signflip+trimmed"]["final_loss"] / max(clean, 1e-12)
+        mean_ratio = rows["signflip+mean"]["final_loss"] / max(clean, 1e-12)
+        derived = (
+            f"flip={payload['robustness_flip']}"
+            f";trimmed_vs_clean={trim_ratio:.2f}x"
+            f";mean_vs_clean={mean_ratio:.2f}x"
+        )
+        _row("fig_robust", time.perf_counter() - t0, derived)
 
     if only is None or "table2" in only:
         from benchmarks import table2_complexity

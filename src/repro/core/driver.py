@@ -173,6 +173,23 @@ def _eval_at_xbar(eval_fn: EvalFn, state, k: int) -> Dict[str, float]:
     return dict(eval_fn(x_bar), round=k)
 
 
+def _eval_agent_groups(eval_fn: EvalFn, state, k: int, mask) -> Dict[str, float]:
+    """Split eval-at-x̄ by the Byzantine mask: the honest agents' consensus
+    point (``honest_<key>``) vs. the faulty group's (``byz_<key>``) — the
+    per-agent series a robustness run reads to see who actually converged."""
+    m = np.asarray(mask, dtype=bool)
+    out: Dict[str, float] = {}
+    honest = jax.tree.map(lambda v: jnp.mean(v[~m], axis=0), state.x)
+    for key, val in eval_fn(honest).items():
+        out[f"honest_{key}"] = val
+    if m.any():
+        byz = jax.tree.map(lambda v: jnp.mean(v[m], axis=0), state.x)
+        for key, val in eval_fn(byz).items():
+            out[f"byz_{key}"] = val
+    out["round"] = k
+    return out
+
+
 def record_flags(
     hist, flags: np.ndarray, realized=None, start: int = 0, seconds=None
 ) -> None:
@@ -234,9 +251,15 @@ def eval_boundary(k: int, rounds: int, eval_every: int) -> bool:
 
 def maybe_eval(hist, eval_fn: Optional[EvalFn], eval_every: int, rounds: int,
                state, k: int) -> None:
-    """Append the eval-at-x̄ readout when round ``k`` is an eval boundary."""
-    if eval_fn is not None and eval_boundary(k, rounds, eval_every):
-        hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k))
+    """Append the eval-at-x̄ readout when round ``k`` is an eval boundary;
+    histories carrying an ``adversary_mask`` additionally get the
+    honest-vs-Byzantine group split appended to ``eval_per_agent``."""
+    if eval_fn is None or not eval_boundary(k, rounds, eval_every):
+        return
+    hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k))
+    mask = getattr(hist, "adversary_mask", None)
+    if mask is not None:
+        hist.eval_per_agent.append(_eval_agent_groups(eval_fn, state, k, mask))
 
 
 def drive_scan(

@@ -34,11 +34,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.adversary import (
+    adversary_mask,
+    make_adversarial_mixing,
+    parse_adversary_spec,
+    unwrap_network,
+)
 from repro.core.algorithms import BoundAlgorithm, get_algorithm
 from repro.core.compression import make_byte_model, make_compressor, compress_mixing
 from repro.core.driver import (
     DEFAULT_BLOCK_SIZE,
     DRIVERS,
+    _eval_agent_groups,
     record_flags,
     block_bounds,
     drive_loop,
@@ -51,6 +58,7 @@ from repro.core.driver import (
 from repro.core.mixing import (
     MixingOps,
     make_network_mixing,
+    make_robust_agg,
     make_sparse_network_mixing,
 )
 from repro.core.pisco import LossFn, PiscoConfig, replicate_params
@@ -115,6 +123,18 @@ class ExperimentSpec:
     # profile); None (the default, and what every legacy payload deserializes
     # to) means constant weights, no staleness bound, no server buffer.
     async_: Optional[str] = None
+    # Byzantine fault injection (repro.core.adversary, DESIGN.md §14): an
+    # AdversaryProcess spec — "signflip[:f=..,scale=..]" |
+    # "random:f=..,scale=.." | "collusion:f=..,target=drift" — corrupting the
+    # selected agents' outgoing gossip payloads and server uploads, pure in
+    # (seed, round).  None (the default, and what every legacy payload
+    # deserializes to) injects nothing — bit-identical behavior.
+    adversary: Optional[str] = None
+    # Server-averaging rule at global rounds: "mean" (the default plain
+    # average — bit-identical legacy path) | "trimmed[:f=..]" | "median" |
+    # "krum[:f=..]".  Robust rules need full participation and sync
+    # aggregation (participation=1.0, async_=None).
+    robust_agg: str = "mean"
     compression: Optional[str] = None  # None | "q8" | "q4" | "top0.1" | ...
     error_feedback: bool = True
     # Pluggable update rules (DESIGN.md §10), as declarative strings:
@@ -178,6 +198,26 @@ class ExperimentSpec:
                 raise ValueError(
                     "async_ only applies to driver='events' "
                     f"(got driver={self.driver!r})"
+                )
+        if self.adversary is not None:
+            # full probe: validates grammar AND that f leaves an honest agent
+            parse_adversary_spec(
+                self.adversary, self.config.n_agents, self.config.seed
+            )
+        # probe the robust rule (validates grammar + that trimming leaves
+        # agents); robust rules replace the participation-aware server
+        # average wholesale, so they need the synchronous full fleet
+        if make_robust_agg(self.robust_agg, self.config.n_agents) is not None:
+            if self.participation != 1.0:
+                raise ValueError(
+                    f"robust_agg={self.robust_agg!r} needs participation=1.0 "
+                    f"(got {self.participation}) — robust rules aggregate the "
+                    "full fleet"
+                )
+            if self.async_ is not None:
+                raise ValueError(
+                    f"robust_agg={self.robust_agg!r} needs synchronous server "
+                    f"rounds (async_=None, got {self.async_!r})"
                 )
         if self.driver == "events" and self.systems is None:
             raise ValueError(
@@ -262,6 +302,13 @@ class ExperimentSpec:
                 topo, self.effective_network, self.participation,
                 seed=self.config.seed,
             )
+        # fault injection + robust server rule wrap BEFORE compression, so
+        # corruption rides the compressed wire stream (Byzantine agents
+        # corrupt what they transmit); the clean spec returns mixing as-is
+        mixing = make_adversarial_mixing(
+            mixing, self.adversary, self.robust_agg,
+            n_agents=self.config.n_agents, seed=self.config.seed,
+        )
         if self.compression is not None:
             mixing = compress_mixing(
                 mixing,
@@ -357,9 +404,14 @@ class Experiment:
             # local import: repro.sim imports the Experiment API
             from repro.sim.costmodel import make_time_model
 
+            # pricing sees the base network (unwrap_network): Byzantine
+            # agents send wrong bytes, not different byte/time counts
             hist.time_model = make_time_model(
-                self.spec, hist.byte_model, network=mixing.network
+                self.spec, hist.byte_model, network=unwrap_network(mixing.network)
             )
+        hist.adversary_mask = adversary_mask(
+            self.spec.adversary, self.spec.config.n_agents, self.spec.config.seed
+        )
         return hist
 
     # -- execution ----------------------------------------------------------
@@ -413,7 +465,8 @@ class Experiment:
             server_payloads=bound.comm.server_payloads,
         )
         engine = make_event_engine(
-            spec, byte_model, flags, network=getattr(mixing, "network", None)
+            spec, byte_model, flags,
+            network=unwrap_network(getattr(mixing, "network", None)),
         )
         if not engine.trivial:
             mixing = make_async_mixing(spec)
@@ -423,6 +476,9 @@ class Experiment:
         state = bound.init(self.loss_fn, self._x0_stacked(), comm0)
         hist = History(byte_model=byte_model)
         hist.event_trace = engine.trace
+        hist.adversary_mask = adversary_mask(
+            spec.adversary, spec.config.n_agents, spec.config.seed
+        )
         with record_wall_time(hist):
             state = drive_events(
                 bound, state, sampler, spec.rounds, hist,
@@ -540,6 +596,12 @@ class Experiment:
                         hist.eval_metrics.append(
                             dict(self.eval_fn(x_bar), round=k_end)
                         )
+                        if hist.adversary_mask is not None:
+                            state_i = jax.tree.map(lambda v: v[i], state)
+                            hist.eval_per_agent.append(_eval_agent_groups(
+                                self.eval_fn, state_i, k_end,
+                                hist.adversary_mask,
+                            ))
         for i, hist in enumerate(hists):
             hist.final_state = jax.tree.map(lambda v: v[i], state)
         return hists

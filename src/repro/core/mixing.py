@@ -41,13 +41,75 @@ from repro.core.topology import (
 )
 from repro.utils.compat import shard_map
 from repro.utils.pytree import (
+    tree_agent_krum,
     tree_agent_masked_mean,
     tree_agent_mean,
+    tree_agent_median,
     tree_agent_mix,
     tree_agent_mix_sparse,
+    tree_agent_trimmed_mean,
 )
 
 PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Robust server-averaging rules (Byzantine-tolerant global_avg variants)
+# ---------------------------------------------------------------------------
+
+ROBUST_RULES = ("mean", "trimmed", "median", "krum")
+
+
+def parse_robust_spec(spec: str):
+    """``(rule, f)`` from a robust-aggregation spec string.
+
+    Grammar mirrors the adversary/process specs: ``"mean"`` | ``"median"`` |
+    ``"trimmed[:f=0.2]"`` | ``"krum[:f=0.2]"`` — ``f`` is the assumed
+    Byzantine *fraction*, turned into an agent count via ``ceil(f * n)`` when
+    the rule is instantiated.  Fails fast on unknown rules/keys.
+    """
+    head, _, tail = str(spec).partition(":")
+    rule = head.strip()
+    if rule not in ROBUST_RULES:
+        raise ValueError(
+            f"unknown robust_agg rule {rule!r}; options: {ROBUST_RULES}"
+        )
+    f = 0.2
+    if tail:
+        for item in tail.split(","):
+            k, _, v = item.partition("=")
+            if k.strip() != "f":
+                raise ValueError(
+                    f"robust_agg {rule!r} takes only 'f=<fraction>' "
+                    f"(got {item!r})"
+                )
+            f = float(v)
+    if rule in ("mean", "median") and tail:
+        raise ValueError(f"robust_agg {rule!r} takes no arguments")
+    if not 0.0 <= f < 0.5:
+        raise ValueError(f"robust_agg fraction must be in [0, 0.5), got {f}")
+    return rule, f
+
+
+def make_robust_agg(spec: str, n_agents: int) -> Optional[Callable]:
+    """A pluggable server-averaging rule (tree -> tree, agent-broadcast), or
+    ``None`` for ``"mean"`` — the caller keeps its exact base ``global_avg``
+    so the clean path stays bit-identical.  Validates that the fleet is big
+    enough for the requested trim/selection margin."""
+    rule, f = parse_robust_spec(spec)
+    if rule == "mean":
+        return None
+    n_byz = int(np.ceil(f * n_agents))
+    if rule == "median":
+        return tree_agent_median
+    if rule == "trimmed":
+        if n_agents - 2 * n_byz < 1:
+            raise ValueError(
+                f"trimmed mean needs n - 2*ceil(f*n) >= 1 agents "
+                f"(n={n_agents}, f={f} trims {n_byz} per side)"
+            )
+        return partial(tree_agent_trimmed_mean, trim=n_byz)
+    # krum: neighbor count n - n_byz - 2 is floored at 1 inside the primitive
+    return partial(tree_agent_krum, n_byz=n_byz)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -70,6 +70,14 @@ class History:
     # gating decisions as numpy arrays, consumed by ``price_history`` for
     # post-hoc repricing under other fleets.  Excluded from to_dict().
     event_trace: Any = None
+    # Byzantine runs only (spec.adversary): the fleet's fault mask —
+    # adversary_mask[i] True where agent i is Byzantine (pure in the spec
+    # seed, set by Experiment at history creation).  None for clean runs.
+    adversary_mask: Optional[List[bool]] = None
+    # Per-group eval series split by the mask: dicts of honest_<key> (and
+    # byz_<key> for the faulty group) + 'round', appended at the same eval
+    # boundaries as eval_metrics whenever adversary_mask is set.
+    eval_per_agent: List[Dict[str, float]] = dataclasses.field(default_factory=list)
 
     @property
     def sim_time_s(self) -> List[float]:
@@ -131,6 +139,14 @@ class History:
             "sim_time_s": [float(v) for v in self.sim_time_s],
             "sim_time_total_s": float(self.accountant.total_seconds),
             "staleness": [[int(v) for v in row] for row in self.staleness],
+            "adversary_mask": (
+                [bool(v) for v in self.adversary_mask]
+                if self.adversary_mask is not None
+                else None
+            ),
+            "eval_per_agent": [
+                {k: native(v) for k, v in m.items()} for m in self.eval_per_agent
+            ],
         }
 
 

@@ -17,6 +17,20 @@ from typing import Any, Callable, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+# Domain-separation tags (repro.core.topology idiom): every RNG stream in the
+# data path is keyed by (tag, seed[, round]) so equal seeds can never alias two
+# different draws.  _PARTITION_TAG fixes the historical bug where the iid
+# partition permutation reused the train/test-split stream verbatim;
+# _SAMPLER_TAG keys the per-round minibatch stream, making RoundSampler a pure
+# function of (seed, round_idx) instead of a stateful call-order-dependent one.
+_PARTITION_TAG = 0x9B1D
+_SAMPLER_TAG = 0x5A3D
+
+
+def _derive_seed(tag: int, seed: int) -> int:
+    """Collapse (tag, seed) into one int for APIs taking a scalar seed."""
+    return int(np.random.SeedSequence((int(tag), int(seed))).generate_state(1)[0])
+
 
 def partition_sorted(
     x: np.ndarray, y: np.ndarray, n_agents: int
@@ -74,29 +88,64 @@ class FederatedDataset:
         order = rng.permutation(len(y))
         n_test = int(len(y) * test_fraction)
         test_idx, train_idx = order[:n_test], order[n_test:]
-        part = partition_sorted if heterogeneous else partition_iid
         if heterogeneous:
-            xs, ys = part(x[train_idx], y[train_idx], n_agents)
+            xs, ys = partition_sorted(x[train_idx], y[train_idx], n_agents)
         else:
-            xs, ys = part(x[train_idx], y[train_idx], n_agents, seed=seed)
+            # Domain-separated partition seed: passing ``seed`` verbatim made
+            # the iid partition permutation the *same stream* as the
+            # train/test split above, correlating which samples land where.
+            xs, ys = partition_iid(
+                x[train_idx], y[train_idx], n_agents,
+                seed=_derive_seed(_PARTITION_TAG, seed),
+            )
         return cls(xs, ys, x[test_idx], y[test_idx])
 
 
 class RoundSampler:
     """Sampler matching the trainer's contract: sampler(k) ->
-    (local_batches [T_o, A, b, ...], comm_batch [A, b, ...])."""
+    (local_batches [T_o, A, b, ...], comm_batch [A, b, ...]).
+
+    Round ``k``'s minibatch indices are a **pure function of
+    ``(seed, round_idx)``** — the same domain-separated
+    ``np.random.default_rng((tag, seed, k))`` idiom the topology processes
+    use — so eval replays, checkpoint resume, out-of-order calls, and every
+    driver (loop, scan blocks at any boundary, events) see bit-identical
+    batches for the same round.  The historical sampler drew from one
+    stateful stream and silently ignored ``round_idx``; pass
+    ``legacy_stream=True`` to reproduce that call-order-dependent behavior.
+    """
 
     def __init__(
-        self, data: FederatedDataset, batch_size: int, t_o: int, seed: int = 0
+        self, data: FederatedDataset, batch_size: int, t_o: int, seed: int = 0,
+        *, legacy_stream: bool = False,
     ):
         self.data = data
         self.b = batch_size
         self.t_o = t_o
-        self._rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.legacy_stream = legacy_stream
+        self._rng = np.random.default_rng(seed) if legacy_stream else None
+
+    def _round_idx(self, round_idx: int, n_rounds: int = 1) -> np.ndarray:
+        """(n_rounds, T_o + 1, A, b) sample indices for rounds starting at
+        ``round_idx``, each round's draw pure in ``(seed, round)``.  Round
+        indices are mapped to nonnegative ints (SeedSequence rejects
+        negatives); the init probe ``sampler(-1)`` lands on its own round."""
+        a, m = self.data.n_agents, self.data.samples_per_agent
+        if self.legacy_stream:
+            return self._rng.integers(
+                0, m, size=(n_rounds, self.t_o + 1, a, self.b)
+            )
+        return np.stack([
+            np.random.default_rng(
+                (_SAMPLER_TAG, int(self.seed), int(round_idx + r) % (1 << 63))
+            ).integers(0, m, size=(self.t_o + 1, a, self.b))
+            for r in range(n_rounds)
+        ])
 
     def __call__(self, round_idx: int):
-        a, m = self.data.n_agents, self.data.samples_per_agent
-        idx = self._rng.integers(0, m, size=(self.t_o + 1, a, self.b))
+        a = self.data.n_agents
+        idx = self._round_idx(round_idx)[0]
         xb = np.take_along_axis(
             self.data.x_train[None],
             idx.reshape(self.t_o + 1, a, self.b, *([1] * (self.data.x_train.ndim - 2))),
@@ -112,12 +161,12 @@ class RoundSampler:
         """Batches for rounds ``[start, stop)`` with a leading round axis, in
         one numpy gather + one device put (the scan driver's fast path).
 
-        Consumes the RNG stream in exactly the per-round order, so a block
-        draw and ``stop - start`` sequential ``__call__``s see identical
-        batches."""
+        Each round's indices are drawn from that round's own pure stream, so
+        a block draw and ``stop - start`` sequential ``__call__``s see
+        identical batches regardless of where block boundaries fall."""
         n = stop - start
-        a, m = self.data.n_agents, self.data.samples_per_agent
-        idx = self._rng.integers(0, m, size=(n, self.t_o + 1, a, self.b))
+        a = self.data.n_agents
+        idx = self._round_idx(start, n)
         xb = np.take_along_axis(
             self.data.x_train[None, None],
             idx.reshape(

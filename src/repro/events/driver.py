@@ -115,6 +115,16 @@ def make_async_mixing(spec: Any) -> MixingOps:
         gossip_edges=gossip_edges,
         network=EventNetwork(slot, spec.use_sparse),
     )
+    if getattr(spec, "adversary", None) is not None:
+        # same wrap order as ExperimentSpec.make_mixing: corruption before
+        # compression, on whatever operands the engine stages (robust rules
+        # are validated out for async specs, so robust_agg is a no-op here)
+        from repro.core.adversary import make_adversarial_mixing
+
+        mixing = make_adversarial_mixing(
+            mixing, spec.adversary, getattr(spec, "robust_agg", "mean"),
+            n_agents=n, seed=spec.config.seed,
+        )
     if spec.compression is not None:
         from repro.core.compression import compress_mixing, make_compressor
 
@@ -169,11 +179,20 @@ def drive_events(
         else:
             # trivial mode binds the ordinary dynamic mixing (its own
             # NetworkContext draws operands); the async mixing's EventNetwork
-            # routes the draw to the engine instead
-            drawer = engine if getattr(net, "events", False) else net
-            w_gossip, w_server, messages, participants = drawer.draw_block(
-                start, stop
-            )
+            # routes the draw to the engine instead.  An AdversarialNetwork
+            # wrapping the EventNetwork still draws from the engine, then
+            # augments the gossip operand with the block's round indices.
+            inner = getattr(net, "base", net)
+            if getattr(inner, "events", False):
+                w_gossip, w_server, messages, participants = engine.draw_block(
+                    start, stop
+                )
+                if inner is not net:
+                    w_gossip = net.augment(w_gossip, start, stop)
+            else:
+                w_gossip, w_server, messages, participants = net.draw_block(
+                    start, stop
+                )
             realized = (messages, participants)
             state, metrics = block_fn(
                 state, jnp.asarray(flags), jax.tree.map(jnp.asarray, w_gossip),

@@ -32,6 +32,11 @@ from repro.core.driver import (
     predraw_schedule,
     sample_block,
 )
+from repro.core.adversary import (
+    make_adversarial_mixing,
+    parse_adversary_spec,
+    unwrap_network,
+)
 from repro.core.experiment import Experiment, ExperimentSpec
 from repro.core.mixing import make_network_mixing
 from repro.core.pisco import PiscoConfig, replicate_params
@@ -129,6 +134,16 @@ def main(argv=None) -> int:
                     help="neighbor-sampled cohorts: fraction of agents "
                          "seeding each gossip round (sugar for "
                          "--network cohort:FRAC)")
+    ap.add_argument("--adversary", default=None,
+                    help="Byzantine fault injection (DESIGN.md §14): "
+                         "signflip[:f=..,scale=..] | random:f=..,scale=.. | "
+                         "collusion:f=..,target=drift — the selected agents "
+                         "corrupt their outgoing gossip payloads and server "
+                         "uploads (default: none)")
+    ap.add_argument("--robust-agg", default="mean",
+                    help="server-averaging rule at global rounds: mean "
+                         "(default, plain average) | trimmed[:f=..] | "
+                         "median | krum[:f=..]")
     ap.add_argument("--systems", default=None,
                     help="simulated systems-cost profile (DESIGN.md §11): "
                          f"{'|'.join(PROFILE_NAMES)} with k=v overrides, e.g. "
@@ -215,12 +230,26 @@ def main(argv=None) -> int:
         mixing = make_network_mixing(
             topo, network, args.participation, seed=args.seed
         )
+    # fault injection + robust server rule compose as a mixing wrapper, the
+    # same way ExperimentSpec.make_mixing layers them (before compression)
+    mixing = make_adversarial_mixing(
+        mixing, args.adversary, args.robust_agg,
+        n_agents=args.n_agents, seed=args.seed,
+    )
     lam = "n/a" if topo.lambda_w is None else f"{topo.lambda_w:.4f}"
     print(f"arch={cfg.name} params~{cfg.param_count():,} agents={args.n_agents} "
           f"topology={'sparse/' if args.sparse else ''}{args.topology} "
           f"network={network or 'frozen'} "
           f"participation={args.participation:g} lambda_w={lam} "
           f"p={args.p}")
+    if args.adversary is not None or args.robust_agg != "mean":
+        adv = (
+            parse_adversary_spec(args.adversary, args.n_agents, args.seed)
+            if args.adversary is not None else None
+        )
+        print(f"adversary={args.adversary or 'none'}"
+              + (f" ({adv.n_byz}/{args.n_agents} Byzantine)" if adv else "")
+              + f" robust_agg={args.robust_agg}")
 
     sampler = make_lm_sampler(cfg, args.n_agents, args.batch, args.seq, args.t_o, args.seed)
     key = jax.random.PRNGKey(args.seed)
@@ -255,6 +284,7 @@ def main(argv=None) -> int:
         participation=args.participation,
         systems=args.systems or ("uniform" if args.tune else None),
         async_=async_spec,
+        adversary=args.adversary, robust_agg=args.robust_agg,
         optimizer=args.local_opt, server_optimizer=args.server_opt,
         lr_schedule=args.lr_schedule, opt_policy=args.opt_policy,
         rounds=args.rounds, driver=args.driver, block_size=args.block_size,
@@ -432,7 +462,7 @@ def main(argv=None) -> int:
             mixes_per_round=bound.comm.mixes_per_round,
             server_payloads=bound.comm.server_payloads,
         )
-        tm = make_time_model(spec, byte_model, network=bound.network)
+        tm = make_time_model(spec, byte_model, network=unwrap_network(bound.network))
         secs = tm.price_rounds(flag_hist, start=start_round)
         srv = np.asarray(flag_hist, dtype=bool)
         print(

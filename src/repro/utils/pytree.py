@@ -142,6 +142,65 @@ def tree_agent_weighted_mean(tree, w, keep):
     return jax.tree.map(leaf, tree)
 
 
+def tree_agent_trimmed_mean(tree, trim: int):
+    """Coordinate-wise trimmed mean over the agent axis, broadcast back.
+
+    Per leaf and per coordinate the ``trim`` smallest and ``trim`` largest
+    agent values are discarded and the rest averaged — the classic
+    Byzantine-robust server rule: up to ``trim`` arbitrary outliers per side
+    cannot move the aggregate outside the honest value range.  ``trim = 0``
+    equals :func:`tree_agent_mean` exactly.  Callers must guarantee
+    ``n_agents - 2 * trim >= 1``.
+    """
+    trim = int(trim)
+
+    def leaf(x):
+        n = x.shape[0]
+        s = jnp.sort(x.astype(jnp.float32), axis=0)
+        kept = s[trim : n - trim] if trim > 0 else s
+        m = jnp.mean(kept, axis=0, keepdims=True)
+        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
+def tree_agent_median(tree):
+    """Coordinate-wise median over the agent axis, broadcast back — robust to
+    strictly fewer than half the agents being corrupted per coordinate."""
+
+    def leaf(x):
+        m = jnp.median(x.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
+def tree_agent_krum(tree, n_byz: int):
+    """Krum-style selection over the agent axis, broadcast back.
+
+    Scores each agent by the summed squared distance (across *all* leaves) to
+    its ``n - n_byz - 2`` closest peers and broadcasts the minimizer's whole
+    pytree — the aggregate is always one agent's actual submission, never a
+    blend containing corrupted coordinates.  For tiny fleets the neighbor
+    count is floored at one.
+    """
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    d2 = jnp.zeros((n, n), dtype=jnp.float32)
+    for x in leaves:
+        xf = x.reshape(n, -1).astype(jnp.float32)
+        sq = jnp.sum(xf * xf, axis=1)
+        d2 = d2 + jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * xf @ xf.T, 0.0)
+    m = max(1, n - int(n_byz) - 2)
+    # exclude self-distance (zero) from every agent's closest-neighbor set
+    d2 = d2 + jnp.where(jnp.eye(n, dtype=bool), jnp.inf, 0.0)
+    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :m], axis=1)
+    sel = jnp.argmin(scores)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[sel][None], x.shape).astype(x.dtype), tree
+    )
+
+
 def tree_size(tree) -> int:
     """Total number of scalar elements."""
     return sum(int(x.size) for x in jax.tree.leaves(tree))

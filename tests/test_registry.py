@@ -358,6 +358,18 @@ def test_history_to_dict_is_json_serializable():
     assert hist.final_state is not None  # but is a first-class field
     assert d2["accountant"]["agent_to_agent"] == hist.accountant.agent_to_agent
     assert d2["byte_model"]["server_round_bytes"] > 0
+    # adversary series serialize in their clean-run defaults (the adversarial
+    # shapes are pinned in test_adversary.py)
+    assert d2["adversary_mask"] is None
+    assert d2["eval_per_agent"] == []
+    # ... and round-trip when populated
+    hist.adversary_mask = [True, False, False, False]
+    hist.eval_per_agent.append(
+        {"round": 2, "honest_grad_sq": 0.5, "byz_grad_sq": 1.5}
+    )
+    d3 = json.loads(json.dumps(hist.to_dict()))
+    assert d3["adversary_mask"] == [True, False, False, False]
+    assert d3["eval_per_agent"][0]["honest_grad_sq"] == 0.5
 
 
 def test_round_sampler_block_matches_sequential():

@@ -1,0 +1,166 @@
+"""Serving-path benchmark: delta-multiplexed continuous-batched decode.
+
+Three readouts, all asserted in ``run()`` (DESIGN.md §15):
+
+* **memory** — fleet-weights footprint of the delta representation vs naive
+  ``n`` dense copies at fleet sizes up to 64+ agents (pin: >= 10x at n=64);
+* **bit_identity** — token streams from the delta engine (both materialize
+  modes) vs the dense-materialized baseline fleet under the same request
+  trace (pin: identical for lossless top-k deltas);
+* **rates** — measured tokens/s and p50/p99 request latency for the delta
+  engine under Poisson traffic at two or more request rates.
+
+    PYTHONPATH=src python -m benchmarks.fig_serve
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import save_result
+from repro.models import ModelConfig, get_bundle
+from repro.serve import (
+    ArrivalProcess,
+    ContinuousBatcher,
+    DecodeEngine,
+    FleetDelta,
+    StepCosts,
+    make_requests,
+    materialize_fleet,
+    run_load,
+)
+
+_INIT_TAG = 0x1217
+
+TINY = ModelConfig(
+    name="serve-tiny",
+    arch_type="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    mlp_type="swiglu",
+    dtype="float32",
+    attn_chunk=64,
+    remat=False,
+)
+
+
+def _tokens_of(report) -> dict:
+    return {r.rid: list(r.tokens) for r in report.requests}
+
+
+def _trace(fleet, n_requests, rate, seed=0, prompt_len=16, gen=8):
+    return make_requests(
+        ArrivalProcess(kind="poisson", rate=rate), n_requests,
+        n_agents=fleet.n_agents, vocab_size=TINY.vocab_size,
+        prompt_len=prompt_len, max_new_tokens=gen, seed=seed,
+    )
+
+
+def run(quick: bool = True) -> dict:
+    bundle = get_bundle(TINY)
+    base = bundle.init(jax.random.fold_in(jax.random.PRNGKey(0), _INIT_TAG))
+    slots = 4
+    n_requests = 10 if quick else 32
+    gen = 8 if quick else 16
+    max_seq = 16 + gen + 8
+
+    # -- memory: delta vs naive dense copies over fleet sizes ---------------
+    memory = {}
+    for n in (8, 64) if quick else (8, 64, 256):
+        f = FleetDelta.synthetic(base, n, seed=1)
+        memory[str(n)] = {
+            "n_agents": n,
+            "delta_bytes": f.nbytes(),
+            "naive_bytes": f.naive_nbytes(),
+            "ratio": f.naive_nbytes() / f.nbytes(),
+        }
+    assert memory["64"]["ratio"] >= 10.0, (
+        f"delta fleet must be >=10x smaller than dense copies at n=64, "
+        f"got {memory['64']['ratio']:.1f}x"
+    )
+
+    # -- bit identity: delta engine (both modes) vs dense baseline ----------
+    fleet = FleetDelta.synthetic(base, 16, seed=1)
+    dense = materialize_fleet(fleet)
+    costs = StepCosts(prefill_s=0.05, decode_s=0.01)
+    streams = {}
+    engines = {}
+    for name, (fl, mode) in {
+        "dense": (dense, "admit"),
+        "delta_admit": (fleet, "admit"),
+        "delta_step": (fleet, "step"),
+    }.items():
+        eng = DecodeEngine(
+            bundle, fl, n_slots=slots, max_seq=max_seq, materialize=mode
+        )
+        rep = run_load(
+            ContinuousBatcher(eng), _trace(fleet, n_requests, 4.0, gen=gen),
+            costs=costs,
+        )
+        streams[name] = _tokens_of(rep)
+        engines[name] = eng
+    bit_identical = (
+        streams["delta_admit"] == streams["dense"]
+        and streams["delta_step"] == streams["dense"]
+    )
+    assert bit_identical, (
+        "delta engine must be bit-identical to the dense-materialized "
+        "baseline for lossless top-k deltas"
+    )
+    bit_identity = {
+        "n_requests": n_requests,
+        "admit_vs_dense": streams["delta_admit"] == streams["dense"],
+        "step_vs_dense": streams["delta_step"] == streams["dense"],
+    }
+
+    # -- measured throughput/latency vs request rate ------------------------
+    eng = engines["delta_admit"]
+    # warm-up trace: absorb prefill/decode compiles before timing
+    run_load(ContinuousBatcher(eng), _trace(fleet, 2, 100.0, gen=2))
+    rates = {}
+    for rate in (2.0, 8.0) if quick else (1.0, 4.0, 16.0):
+        rep = run_load(
+            ContinuousBatcher(eng), _trace(fleet, n_requests, rate, gen=gen)
+        )
+        row = {
+            "rate": rate,
+            "n_requests": len(rep.requests),
+            "total_tokens": rep.total_tokens,
+            "tokens_per_s": rep.tokens_per_s,
+            "p50_s": rep.p50_s,
+            "p99_s": rep.p99_s,
+            "mean_queue_wait_s": rep.mean("queue_wait_s"),
+        }
+        assert row["tokens_per_s"] > 0, f"no throughput at rate={rate}"
+        assert row["p99_s"] >= row["p50_s"] > 0
+        rates[f"rate={rate:g}"] = row
+
+    payload = {
+        "quick": quick,
+        "arch": TINY.name,
+        "n_slots": slots,
+        "memory": memory,
+        "bit_identity": bit_identity,
+        "rates": rates,
+    }
+    save_result("BENCH_serve", payload)
+    return payload
+
+
+def main() -> None:
+    payload = run(quick=True)
+    print(f"memory ratio @64 agents: {payload['memory']['64']['ratio']:.1f}x")
+    print(f"bit identity: {payload['bit_identity']}")
+    for k, v in payload["rates"].items():
+        print(
+            f"{k}: {v['tokens_per_s']:.1f} tok/s "
+            f"p50={v['p50_s']*1e3:.1f}ms p99={v['p99_s']*1e3:.1f}ms"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,7 @@ def _row(name: str, seconds: float, derived: str) -> None:
 KNOWN = (
     "fig4", "fig5", "fig6", "fig7", "table2", "roofline", "compression",
     "dynamic", "optimizers", "timecost", "sparse", "async", "robust",
-    "ablation", "driver",
+    "serve", "ablation", "driver",
 )
 
 
@@ -227,6 +227,21 @@ def main() -> None:
             f";parity_n{payload['parity']['n']}={payload['parity']['ok']}"
         )
         _row("fig_sparse", time.perf_counter() - t0, derived)
+
+    if only is None or "serve" in only:
+        from benchmarks import fig_serve
+
+        t0 = time.perf_counter()
+        payload = fig_serve.run(quick=quick)
+        mem = payload["memory"]["64"]["ratio"]
+        bit = all(payload["bit_identity"][k] for k in
+                  ("admit_vs_dense", "step_vs_dense"))
+        best = max(v["tokens_per_s"] for v in payload["rates"].values())
+        derived = (
+            f"mem_savings_n64={mem:.0f}x;bit_identical={bit}"
+            f";best_tok_s={best:.0f}"
+        )
+        _row("fig_serve", time.perf_counter() - t0, derived)
 
     if only is None or "roofline" in only:
         from benchmarks import roofline

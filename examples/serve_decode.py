@@ -1,67 +1,80 @@
-"""Batched serving example: prefill + decode on the Mixtral-family reduced
-config (MoE top-2 routing + sliding-window attention with a rolling KV cache).
+"""Continuous-batched serving example: a synthetic personalized fleet served
+as base + per-agent deltas, with a per-request latency breakdown.
 
-    PYTHONPATH=src python examples/serve_decode.py --batch 4 --gen 24
+Each request belongs to a different agent of the fleet; one jitted decode
+step advances every occupied slot under that slot's own delta.  The table at
+the end splits each request's latency into queue wait (arrival -> admission),
+prefill, and decode time.
+
+    PYTHONPATH=src python examples/serve_decode.py --agents 16 --requests 8
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_reduced
 from repro.models import get_bundle
+from repro.serve import (
+    ArrivalProcess,
+    ContinuousBatcher,
+    DecodeEngine,
+    FleetDelta,
+    make_requests,
+    run_load,
+)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--agents", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--arrival", default="poisson:rate=4")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
     bundle = get_bundle(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
-    max_seq = args.prompt_len + args.gen
+    base = bundle.init(jax.random.PRNGKey(args.seed))
+    fleet = FleetDelta.synthetic(base, args.agents, seed=args.seed)
     print(
-        f"arch={cfg.name} window={cfg.sliding_window} "
-        f"experts={cfg.moe.n_experts if cfg.moe else 0} cache_len="
-        f"{min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq}"
+        f"arch={cfg.name} fleet={fleet.n_agents} agents "
+        f"({fleet.spec.name}): {fleet.nbytes()/2**20:.2f} MiB vs "
+        f"{fleet.naive_nbytes()/2**20:.2f} MiB naive "
+        f"({fleet.naive_nbytes()/max(fleet.nbytes(),1):.1f}x smaller)"
     )
 
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32
+    engine = DecodeEngine(
+        bundle, fleet, n_slots=args.slots,
+        max_seq=args.prompt_len + args.gen + 8,
     )
-    cache = bundle.init_cache(args.batch, max_seq)
+    batcher = ContinuousBatcher(engine, seed=args.seed)
+    requests = make_requests(
+        ArrivalProcess.parse(args.arrival), args.requests,
+        n_agents=fleet.n_agents, vocab_size=cfg.vocab_size,
+        prompt_len=args.prompt_len, max_new_tokens=args.gen, seed=args.seed,
+    )
+    report = run_load(batcher, requests)  # measured engine time
 
-    prefill = jax.jit(bundle.prefill)
-    decode = jax.jit(bundle.decode)
-
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, {"tokens": prompts}, cache)
-    logits.block_until_ready()
-    t_pre = time.perf_counter() - t0
-    print(f"prefill {args.batch}x{args.prompt_len}: {t_pre*1e3:.0f} ms "
-          f"({args.batch*args.prompt_len/t_pre:.0f} tok/s)")
-
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    generated = [np.asarray(tok)[:, 0]]
-    t1 = time.perf_counter()
-    for _ in range(args.gen - 1):
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        generated.append(np.asarray(tok)[:, 0])
-    jax.block_until_ready(tok)
-    t_dec = time.perf_counter() - t1
-    print(f"decode {args.gen-1} steps: {t_dec/(args.gen-1)*1e3:.1f} ms/step "
-          f"({args.batch*(args.gen-1)/t_dec:.0f} tok/s)")
-    gen = np.stack(generated, axis=1)
-    for b in range(min(2, args.batch)):
-        print(f"  seq{b}: {gen[b].tolist()}")
+    print(
+        f"served {len(report.requests)} requests / {report.total_tokens} "
+        f"tokens: {report.tokens_per_s:.1f} tok/s, "
+        f"p50={report.p50_s*1e3:.0f} ms p99={report.p99_s*1e3:.0f} ms"
+    )
+    print(
+        f"{'req':>4} {'agent':>5} {'tok':>4} {'queue_ms':>9} "
+        f"{'prefill_ms':>11} {'decode_ms':>10} {'latency_ms':>11}"
+    )
+    for r in sorted(report.requests, key=lambda r: r.rid):
+        b = r.breakdown()
+        print(
+            f"{b['rid']:>4} {b['agent']:>5} {b['tokens']:>4} "
+            f"{b['queue_wait_s']*1e3:>9.1f} {b['prefill_s']*1e3:>11.1f} "
+            f"{b['decode_s']*1e3:>10.1f} {b['latency_s']*1e3:>11.1f}"
+        )
 
 
 if __name__ == "__main__":

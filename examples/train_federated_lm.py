@@ -25,7 +25,7 @@ from repro.core.algorithms import get_algorithm
 from repro.core.driver import make_block_fn, predraw_schedule, sample_block
 from repro.core.schedule import CommAccountant
 from repro.data.synthetic import synthetic_lm_tokens
-from repro.models import ModelConfig, get_bundle
+from repro.models import ModelConfig, config_to_dict, get_bundle
 
 LM_100M = ModelConfig(
     name="pisco-lm-100m",
@@ -136,9 +136,25 @@ def main():
             f"consensus={float(metrics.consensus_err[-1]):.2e} ({dt/stop:.1f}s/round)"
         )
         if args.ckpt_dir and stop % 100 == 0:
-            save_checkpoint(args.ckpt_dir, stop, state)
+            save_checkpoint(
+                args.ckpt_dir, stop, state,
+                metadata={"model": config_to_dict(cfg)},
+            )
         k = stop
 
+    if args.ckpt_dir:
+        # final-state checkpoint regardless of round count; the manifest
+        # carries the model config, so the serving launcher rebuilds the
+        # bundle from the checkpoint alone
+        path = save_checkpoint(
+            args.ckpt_dir, args.rounds, state,
+            metadata={"model": config_to_dict(cfg)},
+        )
+        print(f"saved final checkpoint: {path}")
+        print(
+            "serve it:  PYTHONPATH=src python -m repro.launch.serve "
+            f"--ckpt {path} --delta topk:f=0.05"
+        )
     print(
         f"\nfinal: loss {losses[0]:.4f} -> {losses[-1]:.4f} over {args.rounds} rounds "
         f"({acct.agent_to_agent} gossip / {acct.agent_to_server} server)"

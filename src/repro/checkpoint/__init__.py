@@ -2,6 +2,12 @@ from repro.checkpoint.checkpoint import (
     save_checkpoint,
     restore_checkpoint,
     latest_checkpoint,
+    read_manifest,
 )
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_checkpoint",
+    "read_manifest",
+]

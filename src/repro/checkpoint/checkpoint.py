@@ -40,14 +40,22 @@ def _path_elem_str(p) -> str:
     return f"x:{p}"
 
 
-def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
-    """Atomically write ckpt_<step>.npz (+ manifest inside the npz)."""
+def save_checkpoint(
+    directory: str, step: int, tree: PyTree, *, metadata: Optional[dict] = None
+) -> str:
+    """Atomically write ckpt_<step>.npz (+ manifest inside the npz).
+
+    ``metadata`` (JSON-serializable) rides along in the manifest — e.g. the
+    fleet exporter tags its checkpoints ``{"kind": "fleet"}`` — and is read
+    back by :func:`read_manifest` without loading any arrays."""
     os.makedirs(directory, exist_ok=True)
     items = _flatten_with_paths(tree)
     manifest = {
         "step": step,
         "keys": [k for k, _ in items],
+        "dtypes": [str(arr.dtype) for _, arr in items],
         "structure": _structure_of(tree),
+        "metadata": metadata or {},
     }
     payload = {f"arr_{i}": arr for i, (_, arr) in enumerate(items)}
     payload["__manifest__"] = np.frombuffer(
@@ -98,13 +106,40 @@ def _rebuild(structure, leaves_iter):
     return next(leaves_iter)
 
 
+def _restore_dtype(arr: np.ndarray, name: str) -> np.ndarray:
+    """Undo npz's dtype erasure for extension dtypes: ml_dtypes leaves
+    (bfloat16, float8_*) come back as raw void bytes — reinterpret them."""
+    if str(arr.dtype) == name:
+        return arr
+    try:
+        dt = np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        dt = np.dtype(getattr(ml_dtypes, name))
+    return arr.view(dt) if arr.dtype.kind == "V" else arr.astype(dt)
+
+
 def restore_checkpoint(path: str) -> tuple:
-    """Returns (step, tree). Namedtuples come back as plain tuples."""
+    """Returns (step, tree). Namedtuples come back as plain tuples; leaf
+    dtypes are restored exactly as saved (including ml_dtypes extensions)."""
     with np.load(path) as data:
         manifest = json.loads(bytes(data["__manifest__"].tobytes()).decode())
         arrays = [data[f"arr_{i}"] for i in range(len(manifest["keys"]))]
+    dtypes = manifest.get("dtypes")
+    if dtypes is not None:
+        arrays = [_restore_dtype(a, d) for a, d in zip(arrays, dtypes)]
     tree = _rebuild(manifest["structure"], iter(arrays))
     return manifest["step"], tree
+
+
+def read_manifest(path: str) -> dict:
+    """The checkpoint's manifest (step, leaf keys, structure, metadata)
+    without materializing the payload arrays."""
+    with np.load(path) as data:
+        manifest = json.loads(bytes(data["__manifest__"].tobytes()).decode())
+    manifest.setdefault("metadata", {})
+    return manifest
 
 
 def latest_checkpoint(directory: str) -> Optional[str]:

@@ -84,6 +84,28 @@ class History:
         """Simulated seconds per executed round (the accountant's ledger)."""
         return self.accountant.per_round_seconds
 
+    def agent_params(self) -> Any:
+        """The agent-stacked per-agent parameters of the finished run — the
+        export hook the serving subsystem (:mod:`repro.serve.delta`) consumes.
+
+        Every algorithm state stores the model estimates ``X`` as its first
+        field (``.x`` on the live NamedTuples; index 0 on states restored
+        from checkpoints, where namedtuples come back as plain tuples)."""
+        st = self.final_state
+        if st is None:
+            raise ValueError(
+                "History has no final_state — run the experiment first "
+                "(final_state is set by the drivers on completion)"
+            )
+        x = getattr(st, "x", None)
+        if x is None and isinstance(st, (tuple, list)) and len(st) > 0:
+            x = st[0]
+        if x is None:
+            raise ValueError(
+                f"cannot locate agent-stacked params in {type(st).__name__}"
+            )
+        return x
+
     def running_mean_eval(self, key: str) -> np.ndarray:
         vals = np.array([m[key] for m in self.eval_metrics], dtype=np.float64)
         return np.cumsum(vals) / (np.arange(len(vals)) + 1)

@@ -1,96 +1,169 @@
-"""Batched serving driver: prefill a batch of prompts, then decode greedily.
+"""Personalized-fleet serving driver (DESIGN.md §15): delta-multiplexed
+continuous-batched decode under simulated traffic.
 
-Runs the same prefill/decode step functions the dry-run lowers; on the CPU
-container use --reduced.
+Serves a *fleet* of per-agent personalized models — a trained federated
+checkpoint (``--ckpt`` / ``--ckpt-dir``, e.g. one written by
+``examples/train_federated_lm.py`` or :func:`repro.serve.export_fleet`) or a
+synthetic stand-in fleet (``--agents``) — as shared base weights plus compact
+per-agent deltas, and drives a reproducible Poisson/bursty request trace
+through the continuous batcher.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
-        --batch 4 --prompt-len 32 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --agents 64 --requests 32 --arrival poisson:rate=4 --slots 4
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --ckpt-dir artifacts/ckpt --delta topk:f=0.05,q8 --requests 16
+
+``--arch`` is optional with a checkpoint whose manifest carries the model
+config (``examples/train_federated_lm.py`` writes it): the bundle is rebuilt
+from the checkpoint alone.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
-from repro.models import get_bundle
+from repro.models import config_from_dict, get_bundle
+from repro.serve import (
+    ArrivalProcess,
+    ContinuousBatcher,
+    DecodeEngine,
+    DeltaSpec,
+    FleetDelta,
+    StepCosts,
+    make_requests,
+    materialize_fleet,
+    run_load,
+)
+
+_INIT_TAG = 0x1217  # parameter-init stream; sampling uses batcher's own tag
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt", default=None, help="fleet/state checkpoint file")
+    ap.add_argument(
+        "--ckpt-dir", default=None, help="directory; serves latest_checkpoint"
+    )
+    ap.add_argument(
+        "--agents", type=int, default=16,
+        help="synthetic fleet size when no checkpoint is given",
+    )
+    ap.add_argument(
+        "--delta", default="topk:f=0.05",
+        help="delta format for checkpoint fleets (synthetic fleets are "
+        "always lossless top-k): dense | topk[:f=F][,q8] | lowrank[:r=R]",
+    )
+    ap.add_argument(
+        "--dense-baseline", action="store_true",
+        help="serve n dense copies instead of deltas (memory baseline)",
+    )
+    ap.add_argument(
+        "--materialize", choices=("admit", "step"), default="admit",
+        help="apply deltas once at admission, or inside every decode step",
+    )
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--arrival", default="poisson:rate=2")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--fixed-costs", default=None, metavar="PREFILL_S,DECODE_S",
+        help="deterministic per-op costs instead of measured engine time",
+    )
     args = ap.parse_args(argv)
 
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    bundle = get_bundle(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = bundle.init(key)
-    max_seq = args.prompt_len + args.gen + 8
+    path = args.ckpt
+    if path is None and args.ckpt_dir:
+        from repro.checkpoint import latest_checkpoint
 
-    rng = np.random.default_rng(args.seed)
-    tokens = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
-        jnp.int32,
-    )
-    batch = {"tokens": tokens}
-    if cfg.is_enc_dec:
-        batch["frames"] = jnp.asarray(
-            rng.normal(size=(args.batch, args.prompt_len // 4, cfg.d_model)).astype(
-                np.float32
+        path = latest_checkpoint(args.ckpt_dir)
+        if path is None:
+            raise SystemExit(f"no checkpoint found in {args.ckpt_dir!r}")
+
+    if args.arch is not None:
+        cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    elif path is not None:
+        from repro.checkpoint import read_manifest
+
+        meta = read_manifest(path).get("metadata", {})
+        if "model" not in meta:
+            raise SystemExit(
+                f"{path!r} has no model config in its manifest — pass --arch"
             )
-        ).astype(jnp.dtype(cfg.dtype))
-        cache = bundle.init_cache(args.batch, max_seq, mem_len=args.prompt_len // 4)
+        cfg = config_from_dict(meta["model"])
     else:
-        cache = bundle.init_cache(args.batch, max_seq)
-    if cfg.modality == "vlm":
-        n_patch = max(1, args.prompt_len // 8)
-        batch["prefix_embeds"] = jnp.asarray(
-            rng.normal(size=(args.batch, n_patch, cfg.d_model)).astype(np.float32)
-        ).astype(jnp.dtype(cfg.dtype))
-        from repro.models.rope import mrope_text_positions
+        raise SystemExit("pass --arch (synthetic fleet) or a checkpoint")
+    bundle = get_bundle(cfg)
+    # Domain-separated streams: init must never share a key with sampling
+    # (the batcher folds its own _SAMPLE_TAG off the same seed).
+    init_key = jax.random.fold_in(jax.random.PRNGKey(args.seed), _INIT_TAG)
 
-        batch["positions"] = mrope_text_positions(
-            args.batch, args.prompt_len + n_patch
+    spec = DeltaSpec.parse(args.delta)
+    if path is not None:
+        fleet = FleetDelta.from_checkpoint(path, spec)
+        print(f"fleet: {path} ({fleet.n_agents} agents, delta={spec.name})")
+    else:
+        base = bundle.init(init_key)
+        fleet = FleetDelta.synthetic(base, args.agents, seed=args.seed)
+        print(
+            f"fleet: synthetic ({fleet.n_agents} agents, "
+            f"delta={fleet.spec.name})"
         )
 
-    prefill = jax.jit(bundle.prefill)
-    decode = jax.jit(bundle.decode)
+    ratio = fleet.naive_nbytes() / max(fleet.nbytes(), 1)
+    print(
+        f"fleet memory: {fleet.nbytes()/2**20:.2f} MiB delta vs "
+        f"{fleet.naive_nbytes()/2**20:.2f} MiB naive dense ({ratio:.1f}x)"
+    )
+    served = materialize_fleet(fleet) if args.dense_baseline else fleet
 
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, batch, cache)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    max_seq = args.prompt_len + args.gen + 8
+    engine = DecodeEngine(
+        bundle, served, n_slots=args.slots, max_seq=max_seq,
+        materialize=args.materialize,
+    )
+    batcher = ContinuousBatcher(
+        engine, temperature=args.temperature, seed=args.seed
+    )
+    requests = make_requests(
+        ArrivalProcess.parse(args.arrival), args.requests,
+        n_agents=fleet.n_agents, vocab_size=cfg.vocab_size,
+        prompt_len=args.prompt_len, max_new_tokens=args.gen, seed=args.seed,
+    )
+    costs = None
+    if args.fixed_costs:
+        pre, dec = (float(v) for v in args.fixed_costs.split(","))
+        costs = StepCosts(prefill_s=pre, decode_s=dec)
 
-    out_tokens = []
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    t1 = time.perf_counter()
-    for i in range(args.gen):
-        out_tokens.append(np.asarray(tok)[:, 0])
-        logits, cache = decode(params, tok, cache)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits[:, -1] / args.temperature, axis=-1
-            )[:, None].astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t1
-
-    gen = np.stack(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms   decode: {t_decode/args.gen*1e3:.2f} ms/tok")
-    for b in range(min(2, args.batch)):
-        print(f"  seq{b}: {gen[b][:12].tolist()}")
+    report = run_load(batcher, requests, costs=costs)
+    print(
+        f"arch={cfg.name} slots={args.slots} arrival={args.arrival} "
+        f"materialize={args.materialize}"
+        + (" dense-baseline" if args.dense_baseline else "")
+    )
+    print(
+        f"served {len(report.requests)} requests, "
+        f"{report.total_tokens} tokens in {report.makespan_s:.3f} s "
+        f"-> {report.tokens_per_s:.1f} tok/s"
+    )
+    print(
+        f"latency p50={report.p50_s*1e3:.1f} ms p99={report.p99_s*1e3:.1f} ms "
+        f"(mean queue={report.mean('queue_wait_s')*1e3:.1f} "
+        f"prefill={report.mean('prefill_s')*1e3:.1f} "
+        f"decode={report.mean('decode_s')*1e3:.1f})"
+    )
+    for r in sorted(report.requests, key=lambda r: r.rid)[:4]:
+        print(
+            f"  req{r.rid} agent={r.agent_id} tokens={r.tokens[:8]}"
+            + ("..." if len(r.tokens) > 8 else "")
+        )
     return 0
 
 

@@ -1,4 +1,11 @@
-from repro.models.config import MLAConfig, MoEConfig, ModelConfig, SSMConfig
+from repro.models.config import (
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    config_from_dict,
+    config_to_dict,
+)
 from repro.models.registry import ModelBundle, get_bundle
 
 __all__ = [
@@ -7,5 +14,7 @@ __all__ = [
     "ModelConfig",
     "SSMConfig",
     "ModelBundle",
+    "config_from_dict",
+    "config_to_dict",
     "get_bundle",
 ]

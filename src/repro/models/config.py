@@ -216,3 +216,34 @@ class ModelConfig:
         n_moe_layers = sum(1 for k in self.ffn_kinds() if k == "moe")
         inactive = n_moe_layers * (mo.n_experts - mo.top_k) * per_expert
         return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip (checkpoint manifests carry the model config so a serving
+# process can rebuild the bundle without knowing the training script's arch)
+# ---------------------------------------------------------------------------
+
+
+def config_to_dict(cfg: ModelConfig) -> dict:
+    """JSON-serializable form of a :class:`ModelConfig` (nested sub-configs
+    become dicts, tuples become lists)."""
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: dict) -> ModelConfig:
+    """Inverse of :func:`config_to_dict` — rebuilds nested sub-configs and
+    restores the tuple-typed fields JSON turned into lists."""
+    d = dict(d)
+    if d.get("moe") is not None:
+        d["moe"] = MoEConfig(**d["moe"])
+    if d.get("ssm") is not None:
+        s = dict(d["ssm"])
+        if s.get("a_init_range") is not None:
+            s["a_init_range"] = tuple(s["a_init_range"])
+        d["ssm"] = SSMConfig(**s)
+    if d.get("mla") is not None:
+        d["mla"] = MLAConfig(**d["mla"])
+    for k in ("mrope_sections", "hybrid_period"):
+        if d.get(k) is not None:
+            d[k] = tuple(d[k])
+    return ModelConfig(**d)

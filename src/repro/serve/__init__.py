@@ -1,0 +1,36 @@
+"""Personalized-fleet serving: delta-compressed weights, continuous-batched
+multiplexed decode, and a simulated-traffic load model (DESIGN.md §15)."""
+from repro.serve.batcher import ContinuousBatcher, Request
+from repro.serve.delta import (
+    DeltaSpec,
+    DenseFleet,
+    FleetDelta,
+    export_fleet,
+    materialize,
+    materialize_fleet,
+)
+from repro.serve.engine import DecodeEngine
+from repro.serve.load import (
+    ArrivalProcess,
+    ServeReport,
+    StepCosts,
+    make_requests,
+    run_load,
+)
+
+__all__ = [
+    "ArrivalProcess",
+    "ContinuousBatcher",
+    "DecodeEngine",
+    "DeltaSpec",
+    "DenseFleet",
+    "FleetDelta",
+    "Request",
+    "ServeReport",
+    "StepCosts",
+    "export_fleet",
+    "make_requests",
+    "materialize",
+    "materialize_fleet",
+    "run_load",
+]

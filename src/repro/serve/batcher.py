@@ -1,0 +1,153 @@
+"""Continuous batching: the request/slot state machine over a DecodeEngine.
+
+Classic static batching pads a batch of requests to the longest generation
+and leaves slots idle as short requests finish.  Continuous batching instead
+treats the decode batch as **S slots** with independent lifecycles:
+
+    FREE --admit(prefill + first token)--> ACTIVE --EOS / max-gen--> FREE
+
+A slot is (re)filled the moment it frees up, so the decode program — one
+jitted step for all S slots, multiplexed across each slot's *own* agent delta
+— keeps running at full width under load.  The batcher is pure policy: it
+owns no device state beyond what the engine exposes, and no clock — the load
+generator (:mod:`repro.serve.load`) owns time and stamps the request records.
+
+Sampling: greedy argmax by default; with ``temperature > 0`` tokens are drawn
+from per-request PRNG streams domain-separated as ``fold_in(fold_in(key,
+_SAMPLE_TAG), rid)`` then per-step — no key is ever reused across requests,
+steps, or with the parameter-init stream (the PR 8 determinism conventions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.serve.engine import DecodeEngine
+
+_SAMPLE_TAG = 0x5A3B1E  # domain tag for the sampling stream
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its recorded lifecycle.
+
+    Timestamps are on the load generator's (simulated) clock, in seconds;
+    ``prefill_s`` / ``decode_s`` accumulate the engine time attributed to this
+    request, so ``latency ≈ queue_wait + prefill + decode`` by construction.
+    """
+
+    rid: int
+    agent_id: int
+    prompt: np.ndarray  # (L,) int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival_s: float = 0.0
+    admit_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def queue_wait_s(self) -> float:
+        return (self.admit_s or 0.0) - self.arrival_s
+
+    @property
+    def latency_s(self) -> float:
+        return (self.done_s or 0.0) - self.arrival_s
+
+    def breakdown(self) -> dict:
+        return {
+            "rid": self.rid,
+            "agent": self.agent_id,
+            "tokens": len(self.tokens),
+            "queue_wait_s": self.queue_wait_s,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "latency_s": self.latency_s,
+        }
+
+
+class ContinuousBatcher:
+    """Admit-on-free-slot / evict-on-EOS-or-max-gen over a fixed-slot engine."""
+
+    def __init__(
+        self,
+        engine: DecodeEngine,
+        *,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.engine = engine
+        self.temperature = float(temperature)
+        self._key = jax.random.fold_in(jax.random.PRNGKey(seed), _SAMPLE_TAG)
+        self.slots: List[Optional[Request]] = [None] * engine.n_slots
+        self._next_tok = np.zeros(engine.n_slots, dtype=np.int32)
+        self.completed: List[Request] = []
+
+    # -- state --------------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    @property
+    def active(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    # -- sampling -----------------------------------------------------------
+
+    def _sample(self, req: Request, logits: np.ndarray) -> int:
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits))
+        key = jax.random.fold_in(self._key, req.rid)
+        key = jax.random.fold_in(key, len(req.tokens))
+        return int(
+            jax.random.categorical(
+                key, jax.numpy.asarray(logits, jax.numpy.float32) / self.temperature
+            )
+        )
+
+    def _emit(self, slot: int, req: Request, token: int) -> bool:
+        """Record ``token`` for ``req``; evict if done.  Returns finished."""
+        req.tokens.append(token)
+        self._next_tok[slot] = token
+        done = len(req.tokens) >= req.max_new_tokens or (
+            req.eos_id is not None and token == req.eos_id
+        )
+        if done:
+            self.slots[slot] = None
+            self.completed.append(req)
+        return done
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def admit(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot and emit its first token.
+
+        Returns True when the request already finished at admission
+        (``max_new_tokens == 1`` or an immediate EOS)."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("admit() with no free slot — check free_slots()")
+        slot = free[0]
+        logits = self.engine.admit(slot, req.agent_id, req.prompt)
+        self.slots[slot] = req
+        return self._emit(slot, req, self._sample(req, logits))
+
+    def step(self) -> List[Request]:
+        """One decode step for every occupied slot; returns newly finished
+        requests (their slots are already freed)."""
+        if not self.active:
+            return []
+        logits = self.engine.step(self._next_tok)
+        finished = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self._emit(slot, req, self._sample(req, logits[slot])):
+                finished.append(req)
+        return finished

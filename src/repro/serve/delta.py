@@ -1,0 +1,411 @@
+"""Personalized fleets as shared base weights + compact per-agent deltas.
+
+A trained semi-decentralized run produces *n* personalized parameter sets
+(the agent-stacked ``X`` of the final algorithm state).  Storing them as *n*
+dense copies is O(n · P) — hopeless for millions of agents.  This module
+stores the fleet as one shared **base** pytree plus one compact **delta** per
+agent, in one of three leaf representations selected by :class:`DeltaSpec`:
+
+* ``dense``   — raw per-agent values (lossless, the trivial reference; same
+  footprint as naive copies, used to pin the others);
+* ``topk``    — the ``k = ceil(f·d)`` coordinates per leaf where the agent
+  deviates most from the base, stored in **set-form**: ``(idx, val)`` where
+  ``val`` holds the *raw* parameter values at those coordinates and
+  materialization overwrites ``base[idx] = val``.  Set-form (rather than the
+  additive ``base + (p - base)``) makes reconstruction **bit-exact by
+  construction** whenever the index set covers every differing coordinate —
+  no float cancellation caveats — which is the lossless case the serving
+  bit-identity pin relies on.  With ``q8`` the stored payload switches to the
+  int8-quantized *difference* plus one fp32 scale per (leaf, agent) row
+  (additive reconstruction, error ≤ scale/2 per coordinate, deterministic
+  rounding — the same wire format family as :mod:`repro.core.compression`);
+* ``lowrank`` — a rank-``r`` SVD of the per-agent residual for ndim ≥ 2
+  leaves (1-D leaves — norms, biases — fall back to ``dense``; they are a
+  rounding error of the footprint).  Approximate; for serving studies of the
+  quality/footprint frontier, not the bit-identity path.
+
+``gather(arrays, ids)`` is the jit-facing entry the decode engine calls: it
+reconstructs a *slot-stacked* parameter pytree for the (few) agents currently
+scheduled in the decode batch, so only ``n_slots`` dense copies ever exist on
+device no matter how large the fleet is.
+
+Exporters close the train→checkpoint→serve loop: :meth:`FleetDelta.from_history`
+consumes a finished :class:`~repro.core.trainer.History` (via its
+``agent_params()`` hook) and :meth:`FleetDelta.from_checkpoint` consumes a
+``repro.checkpoint`` file written during training (the algorithm-state tuple,
+a ``{"x": stacked}`` dict, or a bare stacked pytree).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_QMAX = 127.0  # int8 symmetric grid
+
+
+# ---------------------------------------------------------------------------
+# Spec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaSpec:
+    """Declarative delta format: ``"dense" | "topk[:f=..][,q8] | lowrank[:r=..]"``."""
+
+    kind: str = "topk"
+    fraction: float = 0.05  # topk: kept fraction of each leaf
+    rank: int = 4  # lowrank: SVD rank per ndim>=2 leaf
+    quantize: bool = False  # topk: int8-quantize the residual payload
+
+    def __post_init__(self):
+        if self.kind not in ("dense", "topk", "lowrank"):
+            raise ValueError(f"unknown delta kind {self.kind!r}")
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(f"fraction must be in (0, 1], got {self.fraction}")
+        if self.rank < 1:
+            raise ValueError(f"rank must be >= 1, got {self.rank}")
+        if self.quantize and self.kind != "topk":
+            raise ValueError("q8 only applies to kind='topk'")
+
+    @classmethod
+    def parse(cls, spec: str) -> "DeltaSpec":
+        """``"topk:f=0.05,q8"`` / ``"lowrank:r=8"`` / ``"dense"``."""
+        name, _, tail = spec.partition(":")
+        kw: dict = {"kind": name}
+        if tail:
+            for item in tail.split(","):
+                item = item.strip()
+                if item == "q8":
+                    kw["quantize"] = True
+                    continue
+                k, sep, v = item.partition("=")
+                if not sep:
+                    raise ValueError(f"bad delta spec item {item!r} in {spec!r}")
+                if k == "f":
+                    kw["fraction"] = float(v)
+                elif k == "r":
+                    kw["rank"] = int(v)
+                else:
+                    raise ValueError(f"unknown delta spec key {k!r} in {spec!r}")
+        return cls(**kw)
+
+    @property
+    def name(self) -> str:
+        if self.kind == "topk":
+            return f"topk:f={self.fraction:g}" + (",q8" if self.quantize else "")
+        if self.kind == "lowrank":
+            return f"lowrank:r={self.rank}"
+        return "dense"
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf delta payloads (NamedTuples => pytree nodes, jit-traversable)
+# ---------------------------------------------------------------------------
+
+
+class DenseDelta(NamedTuple):
+    val: jnp.ndarray  # (n,) + leaf.shape raw values
+
+
+class TopKDelta(NamedTuple):
+    idx: jnp.ndarray  # (n, k) int32 flat coordinates
+    val: jnp.ndarray  # (n, k) raw parameter values (set-form)
+
+
+class QTopKDelta(NamedTuple):
+    idx: jnp.ndarray  # (n, k) int32 flat coordinates
+    q: jnp.ndarray  # (n, k) int8 quantized residual
+    scale: jnp.ndarray  # (n, 1) fp32 per-row dequant scale
+
+
+class LowRankDelta(NamedTuple):
+    u: jnp.ndarray  # (n, d1, r) fp32
+    v: jnp.ndarray  # (n, r, d2) fp32
+
+
+_DELTA_TYPES = (DenseDelta, TopKDelta, QTopKDelta, LowRankDelta)
+
+
+def _is_delta(x) -> bool:
+    return isinstance(x, _DELTA_TYPES)
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf encode / gather
+# ---------------------------------------------------------------------------
+
+
+def _encode_leaf(stacked: np.ndarray, base: np.ndarray, spec: DeltaSpec):
+    """Host-side: one agent-stacked leaf (n, *shape) -> a delta payload."""
+    n = stacked.shape[0]
+    rows = stacked.reshape(n, -1)
+    d = rows.shape[1]
+    if spec.kind == "dense" or (spec.kind == "lowrank" and base.ndim < 2):
+        return DenseDelta(val=jnp.asarray(stacked))
+    if spec.kind == "lowrank":
+        d1 = base.shape[0]
+        d2 = d // d1
+        diff = (rows.astype(np.float32) - base.reshape(1, -1).astype(np.float32))
+        diff = diff.reshape(n, d1, d2)
+        r = min(spec.rank, d1, d2)
+        u_out = np.zeros((n, d1, r), np.float32)
+        v_out = np.zeros((n, r, d2), np.float32)
+        for i in range(n):
+            u, s, vt = np.linalg.svd(diff[i], full_matrices=False)
+            u_out[i] = u[:, :r] * s[:r][None, :]
+            v_out[i] = vt[:r]
+        return LowRankDelta(u=jnp.asarray(u_out), v=jnp.asarray(v_out))
+    # topk
+    k = min(d, max(1, int(math.ceil(spec.fraction * d))))
+    diff = rows.astype(np.float32) - base.reshape(1, -1).astype(np.float32)
+    # largest-|residual| coordinates per agent row; sorted indices keep the
+    # payload deterministic in the input (argpartition order is not)
+    part = np.argpartition(np.abs(diff), d - k, axis=1)[:, d - k:]
+    idx = np.sort(part, axis=1).astype(np.int32)
+    take = np.take_along_axis
+    if spec.quantize:
+        dsel = take(diff, idx, axis=1)
+        scale = np.maximum(np.max(np.abs(dsel), axis=1, keepdims=True), 1e-12)
+        scale = (scale / _QMAX).astype(np.float32)
+        q = np.clip(np.round(dsel / scale), -_QMAX, _QMAX).astype(np.int8)
+        return QTopKDelta(idx=jnp.asarray(idx), q=jnp.asarray(q),
+                          scale=jnp.asarray(scale))
+    val = take(rows, idx, axis=1)  # raw values: set-form, bit-exact coverage
+    return TopKDelta(idx=jnp.asarray(idx), val=jnp.asarray(val))
+
+
+def _gather_leaf(base: jnp.ndarray, delta, ids: jnp.ndarray) -> jnp.ndarray:
+    """Jit-friendly: slot-stacked leaf (S, *shape) for the selected agents."""
+    s = ids.shape[0]
+    shape = base.shape
+    if isinstance(delta, DenseDelta):
+        return delta.val[ids]
+    flat = base.reshape(-1)
+    d = flat.shape[0]
+    rows = jnp.broadcast_to(flat[None], (s, d))
+    slot = jnp.arange(s)[:, None]
+    if isinstance(delta, TopKDelta):
+        rows = rows.at[slot, delta.idx[ids]].set(delta.val[ids].astype(base.dtype))
+    elif isinstance(delta, QTopKDelta):
+        corr = delta.q[ids].astype(jnp.float32) * delta.scale[ids]
+        rows = rows.at[slot, delta.idx[ids]].add(corr.astype(base.dtype))
+    elif isinstance(delta, LowRankDelta):
+        corr = jnp.einsum("sir,srj->sij", delta.u[ids], delta.v[ids])
+        rows = rows + corr.reshape(s, d).astype(base.dtype)
+    else:
+        raise TypeError(f"not a delta payload: {type(delta)}")
+    return rows.reshape((s,) + shape)
+
+
+# ---------------------------------------------------------------------------
+# Fleet containers
+# ---------------------------------------------------------------------------
+
+
+def _tree_nbytes(tree: PyTree) -> int:
+    return sum(
+        int(np.asarray(leaf).size) * np.dtype(np.asarray(leaf).dtype).itemsize
+        for leaf in jax.tree.leaves(tree)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetDelta:
+    """A servable fleet: shared ``base`` + per-agent compact ``deltas``.
+
+    ``deltas`` mirrors the structure of ``base`` with a delta payload
+    (NamedTuple of agent-stacked arrays) at every leaf position.
+    """
+
+    base: PyTree
+    deltas: PyTree
+    spec: DeltaSpec
+    n_agents: int
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_stacked(
+        cls, stacked: PyTree, spec: DeltaSpec, base: Optional[PyTree] = None
+    ) -> "FleetDelta":
+        """Encode an agent-stacked params pytree (leading axis = agents).
+
+        ``base`` defaults to the agent mean (the consensus point a converged
+        semi-decentralized run hovers around, so residuals are small).
+        """
+        stacked = jax.tree.map(np.asarray, stacked)
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        if base is None:
+            base = jax.tree.map(
+                lambda l: l.mean(axis=0, dtype=np.float64).astype(l.dtype), stacked
+            )
+        else:
+            base = jax.tree.map(np.asarray, base)
+        deltas = jax.tree.map(
+            lambda l, b: _encode_leaf(l, b, spec), stacked, base
+        )
+        return cls(
+            base=jax.tree.map(jnp.asarray, base), deltas=deltas, spec=spec,
+            n_agents=int(n),
+        )
+
+    @classmethod
+    def from_history(
+        cls, hist, spec: DeltaSpec, base: Optional[PyTree] = None
+    ) -> "FleetDelta":
+        """Export the servable fleet from a finished ``Experiment.run``."""
+        return cls.from_stacked(hist.agent_params(), spec, base=base)
+
+    @classmethod
+    def from_checkpoint(
+        cls, path: str, spec: DeltaSpec, base: Optional[PyTree] = None
+    ) -> "FleetDelta":
+        """Export from a ``repro.checkpoint`` file.  Accepts the algorithm
+        state tuple the training launchers save (X first), a ``{"x": ...}``
+        dict, or a bare agent-stacked params pytree."""
+        from repro.checkpoint import restore_checkpoint
+
+        _, tree = restore_checkpoint(path)
+        return cls.from_stacked(_stacked_of(tree), spec, base=base)
+
+    @classmethod
+    def synthetic(
+        cls,
+        base: PyTree,
+        n_agents: int,
+        *,
+        fraction: float = 0.02,
+        scale: float = 0.05,
+        seed: int = 0,
+    ) -> "FleetDelta":
+        """A stand-in personalized fleet (no training): each agent perturbs a
+        random ``fraction`` of each leaf's coordinates.  Built directly in
+        delta form — the n-times-dense stack is never materialized — so
+        launchers and benchmarks can exercise large fleets cheaply.  The
+        resulting top-k deltas are lossless by construction (the index set is
+        exactly the perturbed set)."""
+        rng = np.random.default_rng([seed, 0x5EED])
+        base_np = jax.tree.map(np.asarray, base)
+
+        def one(leaf: np.ndarray):
+            d = int(leaf.size)
+            k = min(d, max(1, int(math.ceil(fraction * d))))
+            idx = np.stack(
+                [np.sort(rng.choice(d, size=k, replace=False)) for _ in range(n_agents)]
+            ).astype(np.int32)
+            noise = rng.normal(scale=scale, size=(n_agents, k)).astype(np.float32)
+            val = leaf.reshape(-1)[idx].astype(np.float32) + noise
+            return TopKDelta(idx=jnp.asarray(idx), val=jnp.asarray(val))
+
+        deltas = jax.tree.map(one, base_np)
+        spec = DeltaSpec(kind="topk", fraction=fraction)
+        return cls(
+            base=jax.tree.map(jnp.asarray, base_np), deltas=deltas, spec=spec,
+            n_agents=n_agents,
+        )
+
+    # -- jit-facing ---------------------------------------------------------
+
+    @property
+    def arrays(self) -> tuple:
+        """The device-array pytree jitted engines take as an argument."""
+        return (self.base, self.deltas)
+
+    @staticmethod
+    def gather(arrays: tuple, ids: jnp.ndarray) -> PyTree:
+        """Slot-stacked params (S, ...) for agent ids (S,) — pure, jit-safe."""
+        base, deltas = arrays
+        # tree.map flattens ``deltas`` only down to ``base``'s leaf positions,
+        # so each delta payload (a NamedTuple) arrives at ``_gather_leaf`` whole
+        return jax.tree.map(lambda b, dl: _gather_leaf(b, dl, ids), base, deltas)
+
+    # -- accounting ---------------------------------------------------------
+
+    def nbytes(self) -> int:
+        """Fleet-weights footprint: base + all per-agent delta payloads."""
+        return _tree_nbytes(self.base) + _tree_nbytes(self.deltas)
+
+    def naive_nbytes(self) -> int:
+        """What n dense per-agent copies would cost."""
+        return self.n_agents * _tree_nbytes(self.base)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseFleet:
+    """The naive baseline: n dense parameter copies, gathered by row."""
+
+    stacked: PyTree
+    n_agents: int
+
+    @classmethod
+    def from_stacked(cls, stacked: PyTree) -> "DenseFleet":
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        return cls(stacked=jax.tree.map(jnp.asarray, stacked), n_agents=int(n))
+
+    @property
+    def arrays(self) -> PyTree:
+        return self.stacked
+
+    @staticmethod
+    def gather(arrays: PyTree, ids: jnp.ndarray) -> PyTree:
+        return jax.tree.map(lambda l: l[ids], arrays)
+
+    def nbytes(self) -> int:
+        return _tree_nbytes(self.stacked)
+
+    def naive_nbytes(self) -> int:
+        return self.nbytes()
+
+
+# ---------------------------------------------------------------------------
+# Materialization + export glue
+# ---------------------------------------------------------------------------
+
+
+def materialize(
+    base: PyTree, deltas: PyTree, agents: Optional[Sequence[int]] = None
+) -> PyTree:
+    """Reconstruct dense parameters from ``(base, deltas)``.
+
+    ``agents=None`` materializes every agent (leading axis = fleet);
+    otherwise the given agent ids.  Bit-exact for lossless deltas (dense
+    payloads always; top-k set-form whenever the index set covers every
+    coordinate where the agent deviates from the base)."""
+    n = jax.tree.leaves(deltas)[0].shape[0]
+    ids = jnp.arange(n) if agents is None else jnp.asarray(agents, jnp.int32)
+    return FleetDelta.gather((base, deltas), ids)
+
+
+def materialize_fleet(fleet: FleetDelta) -> DenseFleet:
+    """The dense-materialized baseline of the same personalized fleet."""
+    return DenseFleet.from_stacked(materialize(fleet.base, fleet.deltas))
+
+
+def _stacked_of(tree: PyTree) -> PyTree:
+    """Find the agent-stacked params inside a restored checkpoint tree."""
+    if isinstance(tree, dict):
+        if "x" in tree:
+            return tree["x"]
+        return tree  # bare stacked params dict
+    if isinstance(tree, (tuple, list)) and len(tree) > 0:
+        return tree[0]  # algorithm state: X is the first field by convention
+    return tree
+
+
+def export_fleet(directory: str, hist, step: int = 0) -> str:
+    """Write the agent-stacked final params of a finished run as a fleet
+    checkpoint (``{"x": stacked}`` + a ``kind: fleet`` manifest tag) that
+    :meth:`FleetDelta.from_checkpoint` consumes directly."""
+    from repro.checkpoint import save_checkpoint
+
+    return save_checkpoint(
+        directory, step, {"x": jax.tree.map(np.asarray, hist.agent_params())},
+        metadata={"kind": "fleet"},
+    )

@@ -45,13 +45,17 @@ def test_serve_launcher_end_to_end():
     proc = subprocess.run(
         [
             sys.executable, "-m", "repro.launch.serve",
-            "--arch", "mamba2-370m", "--reduced", "--batch", "2",
+            "--arch", "mamba2-370m", "--reduced", "--agents", "4",
+            "--slots", "2", "--requests", "3",
             "--prompt-len", "16", "--gen", "4",
+            "--fixed-costs", "0.05,0.01",
         ],
         env=_env(), capture_output=True, text=True, timeout=900,
     )
     assert proc.returncode == 0, proc.stderr[-2000:]
-    assert "decode:" in proc.stdout
+    assert "tok/s" in proc.stdout
+    assert "latency p50=" in proc.stdout
+    assert "fleet: synthetic (4 agents" in proc.stdout
 
 
 def test_small_p_approaches_full_server_performance():

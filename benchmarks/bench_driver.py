@@ -42,6 +42,7 @@ from repro.core.compression import make_byte_model
 from repro.core.schedule import make_schedule
 from repro.core.trainer import History, record_wall_time
 from repro.data import RoundSampler
+from repro.obs.profile import profile_capture, track_compile_time
 from repro.sim import FREE_NETWORK
 
 
@@ -137,29 +138,37 @@ def _drive_reps(driver: str, *, rounds: int, eval_every: int, quick: bool):
     return out
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, profile_dir: str | None = None) -> dict:
     rounds = 150 if quick else 600
     eval_every = 25 if quick else 50
     results = {}
-    for driver in ("loop", "scan", "events"):
-        cold, *warms = _drive_reps(
-            driver, rounds=rounds, eval_every=eval_every, quick=quick
-        )
-        warm = min(warms, key=lambda h: h.wall_time_s)
-        results[driver] = {
-            "driver": driver,
-            "rounds": rounds,
-            "eval_every": eval_every,
-            # one-time trace/compile cost vs steady-state per-round cost —
-            # reported separately so cold-vs-cold (compile-dominated) never
-            # masquerades as a per-round comparison
-            "compile_s": max(cold.wall_time_s - warm.wall_time_s, 0.0),
-            "cold_wall_s": cold.wall_time_s,
-            "per_round_s": warm.wall_time_s / rounds,
-            "final_loss": warm.loss[-1],
-            "a2a_rounds": warm.accountant.agent_to_agent,
-            "a2s_rounds": warm.accountant.agent_to_server,
-        }
+    with profile_capture(profile_dir):
+        for driver in ("loop", "scan", "events"):
+            # all three reps share the jit cache, so compilation only happens
+            # inside the cold drive — the listener-measured XLA seconds
+            # cross-check the wall-clock compile_s estimate below
+            with track_compile_time() as cstats:
+                cold, *warms = _drive_reps(
+                    driver, rounds=rounds, eval_every=eval_every, quick=quick
+                )
+            warm = min(warms, key=lambda h: h.wall_time_s)
+            results[driver] = {
+                "driver": driver,
+                "rounds": rounds,
+                "eval_every": eval_every,
+                # one-time trace/compile cost vs steady-state per-round cost —
+                # reported separately so cold-vs-cold (compile-dominated) never
+                # masquerades as a per-round comparison
+                "compile_s": max(cold.wall_time_s - warm.wall_time_s, 0.0),
+                "cold_wall_s": cold.wall_time_s,
+                "per_round_s": warm.wall_time_s / rounds,
+                "final_loss": warm.loss[-1],
+                "a2a_rounds": warm.accountant.agent_to_agent,
+                "a2s_rounds": warm.accountant.agent_to_server,
+            }
+            if cstats.supported:
+                results[driver]["compile_events_s"] = cstats.seconds
+                results[driver]["compile_events"] = dict(cstats.events)
     speedup = results["loop"]["per_round_s"] / max(
         results["scan"]["per_round_s"], 1e-12
     )
@@ -176,7 +185,15 @@ def run(quick: bool = True) -> dict:
 
 
 def main() -> None:
-    payload = run(quick=True)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--profile", default=None, metavar="DIR",
+        help="capture a jax.profiler device trace of the sweep into DIR",
+    )
+    args = ap.parse_args()
+    payload = run(quick=True, profile_dir=args.profile)
     for d in ("loop", "scan", "events"):
         r = payload["results"][d]
         print(

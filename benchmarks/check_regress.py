@@ -1,0 +1,91 @@
+"""CI perf-regression gate over the ``artifacts/bench`` baselines.
+
+    PYTHONPATH=src python -m benchmarks.check_regress \
+        --baseline artifacts/bench --fresh artifacts/fresh
+
+Compares freshly-produced ``BENCH_*.json`` artifacts against the committed
+baselines using the per-metric tolerances in :mod:`repro.obs.regress`
+(deterministic metrics tight, wall-clock loose) and exits 1 on any
+regression.  Stdlib-only: the CI lane needs no jax/numpy install.
+
+Intentional perf changes update the baselines in-place:
+
+    PYTHONPATH=src python -m benchmarks.check_regress \
+        --baseline artifacts/bench --fresh artifacts/fresh --update-baselines
+
+then commit the rewritten ``artifacts/bench/*.json`` with the PR that
+changed the numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import shutil
+import sys
+
+from repro.obs.regress import compare_dirs, format_findings
+
+
+def update_baselines(baseline_dir: str, fresh_dir: str) -> int:
+    """Copy every fresh BENCH_*.json (+ MANIFEST.json) over the baselines."""
+    os.makedirs(baseline_dir, exist_ok=True)
+    copied = 0
+    patterns = ("BENCH_*.json", "MANIFEST.json")
+    for pat in patterns:
+        for src in sorted(glob.glob(os.path.join(fresh_dir, pat))):
+            dst = os.path.join(baseline_dir, os.path.basename(src))
+            shutil.copyfile(src, dst)
+            print(f"updated {dst}")
+            copied += 1
+    return copied
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--baseline", default="artifacts/bench",
+        help="directory of committed baseline artifacts",
+    )
+    ap.add_argument(
+        "--fresh", required=True,
+        help="directory of freshly-produced artifacts to gate",
+    )
+    ap.add_argument(
+        "--only", nargs="*", default=None,
+        help="restrict to these bench keys (e.g. driver async)",
+    )
+    ap.add_argument(
+        "--update-baselines", action="store_true",
+        help="copy fresh artifacts over the baselines instead of gating "
+             "(for intentional perf changes; commit the result)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.update_baselines:
+        n = update_baselines(args.baseline, args.fresh)
+        if n == 0:
+            print(f"no BENCH_*.json found under {args.fresh}", file=sys.stderr)
+            return 1
+        return 0
+
+    findings = compare_dirs(args.baseline, args.fresh, only=args.only)
+    print(format_findings(findings))
+    if not any(f.status != "skipped" for f in findings):
+        # nothing was actually compared (empty fresh dir, bad --only, all
+        # benches missing from one side) — that's a broken gate, not a pass
+        print(
+            f"no metrics compared (baseline={args.baseline} "
+            f"fresh={args.fresh})", file=sys.stderr,
+        )
+        return 1
+    if any(f.failed for f in findings):
+        print("perf regression detected — see table above. "
+              "If intentional, re-baseline with --update-baselines.",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

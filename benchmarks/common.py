@@ -25,6 +25,42 @@ def save_result(name: str, payload: dict) -> str:
     return path
 
 
+def write_manifest(art_dir: str = ARTIFACTS) -> str:
+    """Index the ``BENCH_*.json`` artifacts for the regression gate.
+
+    The manifest maps each bench key (``BENCH_driver.json`` -> ``driver``) to
+    its artifact filename, stamped with the git rev the baselines were built
+    at and the gate schema version, so ``benchmarks/check_regress.py`` can
+    pair baseline/fresh runs without guessing at globs."""
+    import glob
+    import subprocess
+
+    from repro.obs.regress import BENCH_SCHEMA_VERSION, bench_key
+
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        rev = None
+    benches = {}
+    for path in sorted(glob.glob(os.path.join(art_dir, "BENCH_*.json"))):
+        fname = os.path.basename(path)
+        benches[bench_key(fname)] = {"path": fname}
+    manifest = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "git_rev": rev,
+        "benches": benches,
+    }
+    os.makedirs(art_dir, exist_ok=True)
+    out = os.path.join(art_dir, "MANIFEST.json")
+    with open(out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return out
+
+
 def make_logreg_workload(n_agents: int = 10, quick: bool = False, seed: int = 0):
     """§5.1 workload: synthetic-a9a, sorted split, logreg + nonconvex reg."""
     from repro.data.synthetic import synthetic_a9a

@@ -245,12 +245,24 @@ def main() -> None:
 
     if only is None or "roofline" in only:
         from benchmarks import roofline
+        from benchmarks.common import save_result
 
         t0 = time.perf_counter()
         recs = roofline.load_records()
         s = roofline.summarize(recs)
+        # persist the aggregation so the regression gate can pin n_fail == 0
+        save_result(
+            "BENCH_roofline",
+            {"bench": "roofline", "quick": quick, "summary": s},
+        )
         derived = f"ok={s['n_ok']};fail={s['n_fail']};dominant={s['dominant_counts']}"
         _row("roofline", time.perf_counter() - t0, derived.replace(",", ";"))
+
+    # re-index whatever BENCH_* artifacts now exist (this run's plus any
+    # earlier ones in the same artifacts dir) for benchmarks/check_regress.py
+    from benchmarks.common import write_manifest
+
+    write_manifest()
 
 
 if __name__ == "__main__":

@@ -200,8 +200,15 @@ def record_flags(
     the static round constants.  ``start`` is the absolute index of the
     block's first round — the time model's draws are pure in ``(seed, k)``.
     ``seconds`` overrides the time model with an explicit per-round array
-    (the events driver prices rounds from its own event trace)."""
+    (the events driver prices rounds from its own event trace).
+
+    When the history carries a :class:`~repro.obs.trace.TraceRecorder`
+    (``hist.recorder``), each round additionally becomes a span with the
+    same byte/second attribution the accountant gets — recording is purely
+    host-side bookkeeping over values this function already synced, so a
+    ``recorder=None`` run is bit-identical by construction."""
     time_model = getattr(hist, "time_model", None)
+    rec = getattr(hist, "recorder", None)
     for i, f in enumerate(flags):
         f = bool(f)
         hist.is_global.append(f)
@@ -219,6 +226,11 @@ def record_flags(
         else:
             sec = None
         hist.accountant.record(f, nbytes, seconds=sec)
+        if rec is not None:
+            parts = None
+            if seconds is None and time_model is not None:
+                parts = time_model.round_parts(start + i, f)
+            rec.record_round(start + i, f, nbytes, seconds=sec, parts=parts)
 
 
 def record_block(
@@ -257,6 +269,10 @@ def maybe_eval(hist, eval_fn: Optional[EvalFn], eval_every: int, rounds: int,
     if eval_fn is None or not eval_boundary(k, rounds, eval_every):
         return
     hist.eval_metrics.append(_eval_at_xbar(eval_fn, state, k))
+    rec = getattr(hist, "recorder", None)
+    if rec is not None:
+        m = {k2: v for k2, v in hist.eval_metrics[-1].items() if k2 != "round"}
+        rec.add_instant("rounds", "eval", rec.clock_s, round=k, **m)
     mask = getattr(hist, "adversary_mask", None)
     if mask is not None:
         hist.eval_per_agent.append(_eval_agent_groups(eval_fn, state, k, mask))

@@ -340,6 +340,7 @@ class Experiment:
         eval_fn: Optional[EvalFn] = None,
         mixing: Optional[MixingOps] = None,
         stop_when: Optional[Callable[[History], bool]] = None,
+        recorder: Any = None,
     ):
         if (params0 is None) == (x0 is None):
             raise ValueError("pass exactly one of params0 (unstacked) or x0 (stacked)")
@@ -354,6 +355,11 @@ class Experiment:
         self.eval_fn = eval_fn
         self._mixing = mixing
         self.stop_when = stop_when
+        # Optional repro.obs TraceRecorder: threaded onto each History so the
+        # drivers' recording funnel emits spans.  Deliberately NOT part of
+        # _pieces() — grid sweeps build fresh Experiments and must not share
+        # (and interleave onto) one recorder timeline.
+        self.recorder = recorder
 
     # -- plumbing -----------------------------------------------------------
 
@@ -426,6 +432,9 @@ class Experiment:
         _, comm0 = sampler(-1)
         state = bound.init(self.loss_fn, self._x0_stacked(), comm0)
         hist = self._fresh_history(mixing, bound)
+        # single runs only: seed sweeps share device programs but must not
+        # interleave many seeds onto one recorder timeline
+        hist.recorder = self.recorder
         drive = drive_scan if spec.driver == "scan" else drive_loop
         kw = {"block_size": spec.block_size} if spec.driver == "scan" else {}
         with record_wall_time(hist):
@@ -475,6 +484,7 @@ class Experiment:
         _, comm0 = sampler(-1)
         state = bound.init(self.loss_fn, self._x0_stacked(), comm0)
         hist = History(byte_model=byte_model)
+        hist.recorder = self.recorder
         hist.event_trace = engine.trace
         hist.adversary_mask = adversary_mask(
             spec.adversary, spec.config.n_agents, spec.config.seed

@@ -78,6 +78,11 @@ class History:
     # byz_<key> for the faulty group) + 'round', appended at the same eval
     # boundaries as eval_metrics whenever adversary_mask is set.
     eval_per_agent: List[Dict[str, float]] = dataclasses.field(default_factory=list)
+    # Optional repro.obs.trace.TraceRecorder: when set, the drivers' recording
+    # funnel additionally emits one span per round (purely host-side — the
+    # None default is the bit-identical telemetry-off path).  Excluded from
+    # to_dict().
+    recorder: Any = None
 
     @property
     def sim_time_s(self) -> List[float]:
@@ -160,6 +165,19 @@ class History:
             "wall_time_s": float(self.wall_time_s),
             "sim_time_s": [float(v) for v in self.sim_time_s],
             "sim_time_total_s": float(self.accountant.total_seconds),
+            # a2a/a2s split of the simulated-seconds ledger, promoted to
+            # top-level keys (the accountant dict above also carries the
+            # totals, but consumers of the flat schema shouldn't have to know
+            # the accountant's field names); the per-kind series are the
+            # per-round ledger masked by round kind
+            "sim_time_a2a_total_s": float(self.accountant.agent_to_agent_seconds),
+            "sim_time_a2s_total_s": float(self.accountant.agent_to_server_seconds),
+            "sim_time_a2a_s": [
+                float(s) for s, g in zip(self.sim_time_s, self.is_global) if not g
+            ],
+            "sim_time_a2s_s": [
+                float(s) for s, g in zip(self.sim_time_s, self.is_global) if g
+            ],
             "staleness": [[int(v) for v in row] for row in self.staleness],
             "adversary_mask": (
                 [bool(v) for v in self.adversary_mask]
@@ -170,6 +188,71 @@ class History:
                 {k: native(v) for k, v in m.items()} for m in self.eval_per_agent
             ],
         }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "History":
+        """Rebuild a History from :meth:`to_dict` output.
+
+        Device-side fields (``final_state``, ``time_model``, ``event_trace``,
+        ``recorder``) are not serialized and come back ``None``; everything
+        else — including the accountant's a2a/a2s byte *and* seconds split —
+        round-trips exactly."""
+        acct_d = d.get("accountant", {})
+        acct = CommAccountant(
+            **{
+                f.name: acct_d[f.name]
+                for f in dataclasses.fields(CommAccountant)
+                if f.name in acct_d
+            }
+        )
+        bm_d = d.get("byte_model")
+        byte_model = RoundByteModel(**bm_d) if bm_d is not None else None
+        return cls(
+            loss=list(d.get("loss", [])),
+            grad_sq_norm=list(d.get("grad_sq_norm", [])),
+            consensus_err=list(d.get("consensus_err", [])),
+            is_global=[bool(v) for v in d.get("is_global", [])],
+            eval_metrics=[dict(m) for m in d.get("eval_metrics", [])],
+            accountant=acct,
+            byte_model=byte_model,
+            wall_time_s=float(d.get("wall_time_s", 0.0)),
+            staleness=[list(row) for row in d.get("staleness", [])],
+            adversary_mask=(
+                [bool(v) for v in d["adversary_mask"]]
+                if d.get("adversary_mask") is not None
+                else None
+            ),
+            eval_per_agent=[dict(m) for m in d.get("eval_per_agent", [])],
+        )
+
+    def telemetry(self, meta: Optional[Dict[str, Any]] = None):
+        """Export this run into a :class:`~repro.obs.metrics.MetricsRegistry`
+        — the metrics-side counterpart of the span stream (DESIGN.md §16)."""
+        from repro.obs.metrics import MetricsRegistry  # lazy: keep core light
+
+        reg = MetricsRegistry(meta=dict(meta or {}))
+        acct = self.accountant
+        reg.counter("train.rounds_gossip").inc(acct.agent_to_agent)
+        reg.counter("train.rounds_server").inc(acct.agent_to_server)
+        reg.counter("train.bytes_a2a").inc(acct.agent_to_agent_bytes)
+        reg.counter("train.bytes_a2s").inc(acct.agent_to_server_bytes)
+        reg.gauge("train.wall_time_s").set(self.wall_time_s)
+        reg.gauge("train.sim_time_a2a_s").set(acct.agent_to_agent_seconds)
+        reg.gauge("train.sim_time_a2s_s").set(acct.agent_to_server_seconds)
+        reg.histogram("train.round_bytes").observe_many(acct.per_round_bytes)
+        if acct.per_round_seconds:
+            reg.histogram("train.round_sim_s").observe_many(
+                acct.per_round_seconds
+            )
+        if self.loss:
+            reg.gauge("train.final_loss").set(self.loss[-1])
+        if self.staleness:
+            h = reg.histogram("train.staleness")
+            for row in self.staleness:
+                h.observe_many(row)
+        if self.adversary_mask is not None:
+            reg.gauge("train.n_byzantine").set(sum(self.adversary_mask))
+        return reg
 
 
 @contextlib.contextmanager

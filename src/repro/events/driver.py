@@ -198,10 +198,30 @@ def drive_events(
                 state, jnp.asarray(flags), jax.tree.map(jnp.asarray, w_gossip),
                 jax.tree.map(jnp.asarray, w_server), local, comm,
             )
+        rec = getattr(hist, "recorder", None)
+        t_block = rec.clock_s if rec is not None else 0.0
         record_block(
             hist, metrics, flags, realized, start=start,
             seconds=engine.seconds[start:stop],
         )
+        if rec is not None:
+            # per-agent tracks: each agent's view of every round in the block,
+            # annotated with the engine's frozen gating/participation/staleness
+            # decisions — the async story the aggregate round span can't tell
+            gate = engine.trace["gate"]
+            parts = engine.trace["participants"]
+            t0 = t_block
+            for k in range(start, stop):
+                dur = float(engine.seconds[k])
+                f = bool(flags[k - start])
+                for a in range(engine.n_agents):
+                    rec.record_agent_round(
+                        k, a, t0, dur, f,
+                        staleness=int(engine.staleness[k, a]),
+                        participant=bool(parts[k, a]),
+                        gated=bool(not gate[k, a]),
+                    )
+                t0 += dur
         if staleness is not None:
             staleness.extend(engine.staleness[start:stop].tolist())
         maybe_eval(hist, eval_fn, eval_every, rounds, state, stop - 1)

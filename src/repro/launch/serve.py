@@ -77,6 +77,18 @@ def main(argv=None) -> int:
         "--fixed-costs", default=None, metavar="PREFILL_S,DECODE_S",
         help="deterministic per-op costs instead of measured engine time",
     )
+    ap.add_argument(
+        "--trace-out", default=None,
+        help="write a Chrome/Perfetto trace of the session (per-agent "
+        "tracks of queue→prefill→decode request spans; open the JSON "
+        "at ui.perfetto.dev)",
+    )
+    ap.add_argument(
+        "--metrics-out", default=None,
+        help="append the session's metrics-registry snapshot (request/"
+        "token counters, latency gauges, per-slot occupancy) as one "
+        "line of this JSONL file",
+    )
     args = ap.parse_args(argv)
 
     path = args.ckpt
@@ -142,7 +154,26 @@ def main(argv=None) -> int:
         pre, dec = (float(v) for v in args.fixed_costs.split(","))
         costs = StepCosts(prefill_s=pre, decode_s=dec)
 
-    report = run_load(batcher, requests, costs=costs)
+    recorder = None
+    if args.trace_out:
+        from repro.obs import TraceRecorder
+
+        recorder = TraceRecorder(meta={
+            "kind": "serve", "arch": cfg.name, "n_agents": fleet.n_agents,
+            "n_slots": args.slots, "arrival": args.arrival,
+        })
+
+    report = run_load(batcher, requests, costs=costs, recorder=recorder)
+    if args.trace_out:
+        from repro.obs import write_trace
+
+        write_trace(args.trace_out, recorder)
+        print(f"trace written to {args.trace_out} (open at ui.perfetto.dev)")
+    if args.metrics_out:
+        report.telemetry(meta={
+            "kind": "serve", "arch": cfg.name, "arrival": args.arrival,
+        }).write_jsonl(args.metrics_out)
+        print(f"metrics appended to {args.metrics_out}")
     print(
         f"arch={cfg.name} slots={args.slots} arrival={args.arrival} "
         f"materialize={args.materialize}"

@@ -13,6 +13,7 @@ pre-compiled gossip or global round function.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import time
@@ -30,6 +31,7 @@ from repro.core.driver import (
     dynamic_round_fns,
     make_block_fn,
     predraw_schedule,
+    record_flags,
     sample_block,
 )
 from repro.core.adversary import (
@@ -40,7 +42,7 @@ from repro.core.adversary import (
 from repro.core.experiment import Experiment, ExperimentSpec
 from repro.core.mixing import make_network_mixing
 from repro.core.pisco import PiscoConfig, replicate_params
-from repro.core.schedule import CommAccountant
+from repro.core.trainer import History
 from repro.core.mixing import make_sparse_network_mixing
 from repro.core.topology import make_sparse_topology, make_topology
 from repro.optim.update_rules import RULE_NAMES, resolve_update_rules
@@ -207,6 +209,17 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the run "
+                         "(per-round spans with byte/sim-second attribution; "
+                         "open the JSON at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append the run's metrics-registry snapshot "
+                         "(rounds/bytes/sim-seconds counters + histograms) "
+                         "as one line of this JSONL file")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of training into DIR "
+                         "(open in TensorBoard's profile plugin)")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -318,12 +331,39 @@ def main(argv=None) -> int:
         print(f"fastest-to-target: p={result.best.p:g} T_o={result.best.t_o}")
         return 0
 
+    recorder = None
+    if args.trace_out:
+        from repro.obs import TraceRecorder
+
+        recorder = TraceRecorder(meta={
+            "kind": "train", "arch": cfg.name, "algo": args.algo,
+            "driver": args.driver, "n_agents": args.n_agents,
+            "rounds": args.rounds, "systems": args.systems,
+        })
+
+    def write_telemetry(hist) -> None:
+        if args.trace_out:
+            from repro.obs import write_trace
+
+            write_trace(args.trace_out, recorder)
+            print(f"trace written to {args.trace_out} (open at ui.perfetto.dev)")
+        if args.metrics_out:
+            hist.telemetry(meta=dict(recorder.meta) if recorder else {
+                "kind": "train", "arch": cfg.name, "algo": args.algo,
+                "driver": args.driver,
+            }).write_jsonl(args.metrics_out)
+            print(f"metrics appended to {args.metrics_out}")
+
     if args.driver == "events":
         if args.ckpt_dir:
             ap.error("checkpointing is not supported with --driver events")
-        hist = Experiment(
-            spec, loss_fn=bundle.loss, params0=params, sampler=sampler
-        ).run()
+        from repro.obs import profile_capture
+
+        with profile_capture(args.profile):
+            hist = Experiment(
+                spec, loss_fn=bundle.loss, params0=params, sampler=sampler,
+                recorder=recorder,
+            ).run()
         srv = np.asarray(hist.is_global, dtype=bool)
         secs = np.asarray(hist.sim_time_s, dtype=np.float64)
         stale = np.asarray(hist.staleness, dtype=np.int64)
@@ -338,6 +378,7 @@ def main(argv=None) -> int:
             f"{int((~srv).sum())} rounds, server {secs[srv].sum():.2f}s / "
             f"{int(srv.sum())} rounds, peak staleness {int(stale.max())})"
         )
+        write_telemetry(hist)
         return 0
 
     start_round = 0
@@ -358,8 +399,22 @@ def main(argv=None) -> int:
               f"server={so.name if so else 'none'} "
               f"policy={opt_kw.get('opt_policy', 'registry default')}")
     bound = get_algorithm(args.algo).bind(bundle.loss, pcfg, mixing, **opt_kw)
-    acct = CommAccountant()
-    flag_hist: list = []  # executed schedule, for post-run sim pricing
+    # The launcher funnels flag/byte/second recording through the same
+    # History + record_flags seam the Experiment drivers use, so telemetry
+    # (--trace-out / --metrics-out) threads uniformly.
+    hist = History(
+        byte_model=make_byte_model(
+            mixing, x0, args.n_agents,
+            mixes_per_round=bound.comm.mixes_per_round,
+            server_payloads=bound.comm.server_payloads,
+        )
+    )
+    if args.systems:
+        hist.time_model = make_time_model(
+            spec, hist.byte_model, network=unwrap_network(bound.network)
+        )
+    hist.recorder = recorder
+    acct = hist.accountant
 
     local0, comm0 = sampler(-1)
     state = bound.init(bundle.loss, x0, comm0)
@@ -378,7 +433,11 @@ def main(argv=None) -> int:
         state = jax.tree.unflatten(
             treedef, [jnp.asarray(leaf) for leaf in leaves]
         )
+    from repro.obs import profile_capture
+
     t0 = time.perf_counter()
+    _prof = contextlib.ExitStack()
+    _prof.enter_context(profile_capture(args.profile))
     net = bound.network
     if args.driver == "loop":
         if net is not None:
@@ -392,8 +451,7 @@ def main(argv=None) -> int:
         for k in range(start_round, args.rounds):
             local, comm = sampler(k)
             is_global = bool(bound.schedule(k))
-            acct.record(is_global)
-            flag_hist.append(is_global)
+            record_flags(hist, np.array([is_global]), start=k)
             fn = global_fn if is_global else gossip_fn
             if net is not None:
                 w_gossip, w_server, _, _ = net.draw_round(k)
@@ -437,9 +495,7 @@ def main(argv=None) -> int:
                 )
             else:
                 state, metrics = block_fn(state, jnp.asarray(flags), local, comm)
-            for f in flags:
-                acct.record(bool(f))
-                flag_hist.append(bool(f))
+            record_flags(hist, flags, start=k)
             k_end = stop - 1
             if k_end % args.log_every == 0 or k_end == args.rounds - 1:
                 print(
@@ -451,25 +507,24 @@ def main(argv=None) -> int:
             if args.ckpt_dir and args.ckpt_every and stop % args.ckpt_every == 0:
                 save_checkpoint(args.ckpt_dir, stop, state)
             k = stop
+    _prof.close()
     dt = time.perf_counter() - t0
+    hist.wall_time_s = dt
     print(
         f"done: {args.rounds} rounds in {dt:.1f}s "
         f"({acct.agent_to_agent} gossip, {acct.agent_to_server} server rounds)"
     )
     if args.systems:
-        byte_model = make_byte_model(
-            mixing, x0, args.n_agents,
-            mixes_per_round=bound.comm.mixes_per_round,
-            server_payloads=bound.comm.server_payloads,
-        )
-        tm = make_time_model(spec, byte_model, network=unwrap_network(bound.network))
-        secs = tm.price_rounds(flag_hist, start=start_round)
-        srv = np.asarray(flag_hist, dtype=bool)
+        # recorded online by record_flags through the attached time model —
+        # identical to the old post-hoc price_rounds pass
+        secs = np.asarray(hist.sim_time_s, dtype=np.float64)
+        srv = np.asarray(hist.is_global, dtype=bool)
         print(
             f"simulated time under {args.systems!r}: {secs.sum():.2f}s "
             f"(gossip {secs[~srv].sum():.2f}s / {int((~srv).sum())} rounds, "
             f"server {secs[srv].sum():.2f}s / {int(srv.sum())} rounds)"
         )
+    write_telemetry(hist)
     return 0
 
 

@@ -1,0 +1,100 @@
+"""Profiler hooks: ``jax.profiler`` capture + compile-seconds attribution.
+
+Two instruments, both safe to leave in production code paths:
+
+* :func:`profile_capture` — context manager around ``jax.profiler.trace``.
+  ``outdir=None`` (the default everywhere) is a strict no-op; any profiler
+  failure (unsupported backend, missing tensorboard plugin) degrades to a
+  warning rather than killing a benchmark run.
+
+* :func:`track_compile_time` — measures seconds spent compiling inside the
+  ``with`` body, via ``jax.monitoring``'s event-duration listeners (the
+  channel JAX's own internal telemetry uses; events fire with names like
+  ``/jax/core/compile/backend_compile_duration``).  ``jax.monitoring`` has
+  no public unregister, so one module-level listener is installed lazily on
+  first use and fans out to a stack of active :class:`CompileStats` —
+  nesting works, and an empty stack makes the listener a dict lookup + no-op.
+  On jax builds without ``jax.monitoring`` the stats come back with
+  ``supported=False`` and zero seconds.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import warnings
+from typing import Dict, Iterator, List, Optional
+
+
+@dataclasses.dataclass
+class CompileStats:
+    """Compile seconds observed while a ``track_compile_time`` block ran."""
+
+    seconds: float = 0.0
+    events: Dict[str, float] = dataclasses.field(default_factory=dict)
+    supported: bool = True
+
+    def _observe(self, event: str, duration_s: float) -> None:
+        self.events[event] = self.events.get(event, 0.0) + duration_s
+        # backend_compile is a sub-phase of the jaxpr-trace events; summing
+        # all "/compile/" events would double-count, so track the dominant
+        # top-level one for `seconds` and keep the full split in `events`.
+        if event.endswith("backend_compile_duration"):
+            self.seconds += duration_s
+
+
+_ACTIVE: List[CompileStats] = []
+_LISTENER_INSTALLED = False
+
+
+def _listener(event: str, duration_s: float, **kwargs) -> None:
+    if "compile" in event and _ACTIVE:
+        _ACTIVE[-1]._observe(event, duration_s)
+
+
+def _ensure_listener() -> bool:
+    global _LISTENER_INSTALLED
+    if _LISTENER_INSTALLED:
+        return True
+    try:
+        from jax import monitoring
+        monitoring.register_event_duration_secs_listener(_listener)
+    except Exception:  # pragma: no cover - old/stripped jax builds
+        return False
+    _LISTENER_INSTALLED = True
+    return True
+
+
+@contextlib.contextmanager
+def track_compile_time() -> Iterator[CompileStats]:
+    """Yield a :class:`CompileStats` accumulating compile seconds spent
+    inside the block.  Zero overhead beyond a listener dict update per
+    compile event; nesting attributes each compile to the innermost block."""
+    stats = CompileStats(supported=_ensure_listener())
+    _ACTIVE.append(stats)
+    try:
+        yield stats
+    finally:
+        _ACTIVE.remove(stats)
+
+
+@contextlib.contextmanager
+def profile_capture(outdir: Optional[str]) -> Iterator[None]:
+    """Capture a ``jax.profiler`` trace of the block into ``outdir``.
+
+    ``outdir=None`` is a no-op (the default wiring everywhere), so call
+    sites need no conditional.  The resulting directory opens in
+    TensorBoard's profile plugin or via Perfetto's XPlane importer.
+    """
+    if not outdir:
+        yield
+        return
+    import jax
+
+    try:
+        ctx = jax.profiler.trace(outdir)
+    except Exception as e:  # pragma: no cover - backend without profiler
+        warnings.warn(f"jax.profiler.trace unavailable ({e}); not profiling")
+        yield
+        return
+    with ctx:
+        yield

@@ -51,6 +51,9 @@ class Request:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # Which decode slot served this request (set at admission) — the key the
+    # obs layer groups per-slot occupancy metrics by.
+    slot: Optional[int] = None
 
     @property
     def queue_wait_s(self) -> float:
@@ -64,6 +67,7 @@ class Request:
         return {
             "rid": self.rid,
             "agent": self.agent_id,
+            "slot": self.slot,
             "tokens": len(self.tokens),
             "queue_wait_s": self.queue_wait_s,
             "prefill_s": self.prefill_s,
@@ -136,6 +140,7 @@ class ContinuousBatcher:
         slot = free[0]
         logits = self.engine.admit(slot, req.agent_id, req.prompt)
         self.slots[slot] = req
+        req.slot = slot
         return self._emit(slot, req, self._sample(req, logits))
 
     def step(self) -> List[Request]:

@@ -189,14 +189,49 @@ class ServeReport:
             "requests": [r.breakdown() for r in self.requests],
         }
 
+    def telemetry(self, meta: Optional[dict] = None):
+        """Export this session into a
+        :class:`~repro.obs.metrics.MetricsRegistry` — request/token counters,
+        latency gauges, lifecycle histograms, and per-slot decode occupancy
+        (seconds of decode attributed to each slot, DESIGN.md §16)."""
+        from repro.obs.metrics import MetricsRegistry  # lazy: keep serve light
+
+        reg = MetricsRegistry(meta=dict(meta or {}))
+        reg.counter("serve.requests").inc(len(self.requests))
+        reg.counter("serve.tokens").inc(self.total_tokens)
+        reg.gauge("serve.tokens_per_s").set(self.tokens_per_s)
+        reg.gauge("serve.p50_s").set(self.p50_s)
+        reg.gauge("serve.p99_s").set(self.p99_s)
+        reg.gauge("serve.makespan_s").set(self.makespan_s)
+        reg.histogram("serve.queue_wait_s").observe_many(
+            r.queue_wait_s for r in self.requests
+        )
+        reg.histogram("serve.prefill_s").observe_many(
+            r.prefill_s for r in self.requests
+        )
+        reg.histogram("serve.decode_s").observe_many(
+            r.decode_s for r in self.requests
+        )
+        for r in self.requests:
+            if r.slot is not None:
+                reg.counter(f"serve.slot.{r.slot}.requests").inc()
+                reg.counter(f"serve.slot.{r.slot}.decode_s").inc(r.decode_s)
+        return reg
+
 
 def run_load(
     batcher: ContinuousBatcher,
     requests: List[Request],
     *,
     costs: Optional[StepCosts] = None,
+    recorder=None,
 ) -> ServeReport:
-    """Drive ``requests`` through ``batcher`` on a simulated clock."""
+    """Drive ``requests`` through ``batcher`` on a simulated clock.
+
+    ``recorder`` (a :class:`~repro.obs.trace.TraceRecorder`) gets each
+    finished request's queue→prefill→decode lifecycle as spans on the owning
+    agent's track — recorded after the loop from the timestamps the loop
+    already stamps, so recording cannot perturb the clock."""
     pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
     waiting: List[Request] = []
     done: List[Request] = []
@@ -247,4 +282,7 @@ def run_load(
             for r in out:
                 r.done_s = t
                 done.append(r)
+    if recorder is not None:
+        for r in sorted(done, key=lambda r: (r.agent_id, r.arrival_s, r.rid)):
+            recorder.record_request(r)
     return ServeReport(requests=done, clock_s=t)

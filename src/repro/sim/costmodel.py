@@ -173,6 +173,29 @@ class RoundTimeModel:
             local_steps=self.local_steps,
         )
 
+    def round_parts(self, k: int, is_global: bool) -> dict:
+        """Phase decomposition of :meth:`round_time` — ``local_steps`` plus
+        ``server_sync`` (global) or ``gossip_mix`` (gossip), in execution
+        order.  The parts sum to ``round_time(k, is_global)`` exactly (both
+        sides are the same two float adds), which the obs layer relies on to
+        nest phase spans inside each round span."""
+        if is_global:
+            parts = self.participants_at(k)
+            return {
+                "local_steps": self.model.compute_time(self.local_steps, parts),
+                "server_sync": self.model.server_comm_time(
+                    parts, self.server_message_bytes,
+                    payloads=self.server_payloads,
+                ),
+            }
+        return {
+            "local_steps": self.model.compute_time(self.local_steps),
+            "gossip_mix": self.model.gossip_comm_time(
+                self.edges_at(k), self.gossip_message_bytes,
+                mixes=self.mixes_per_round,
+            ),
+        }
+
     def price_rounds(
         self, is_global: Sequence[bool], *, start: int = 0
     ) -> np.ndarray:
